@@ -1,0 +1,59 @@
+"""Shared benchmark infra: timing, cached datasets, CSV emission."""
+from __future__ import annotations
+
+import functools
+import time
+
+import numpy as np
+
+
+def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
+    """Median wall time (s) over warm runs (paper §7: warm, averaged)."""
+    for _ in range(warmup):
+        fn(*args, **kw)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn(*args, **kw)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.1f},{derived}")
+
+
+@functools.lru_cache(maxsize=None)
+def pubmed_m():
+    """PubMed-M-like: high Term fanout (MeSH-only regime)."""
+    from repro.data.synth_graph import make_pubmed
+
+    return make_pubmed(n_docs=20_000, n_terms=1_000, n_authors=6_000,
+                       avg_terms_per_doc=6.0, avg_authors_per_doc=3.0,
+                       zipf_term=1.1, seed=11)
+
+
+@functools.lru_cache(maxsize=None)
+def pubmed_ms():
+    """PubMed-MS-like: supplemental terms → larger Term domain, lower fanout."""
+    from repro.data.synth_graph import make_pubmed
+
+    return make_pubmed(n_docs=20_000, n_terms=12_000, n_authors=6_000,
+                       avg_terms_per_doc=8.0, avg_authors_per_doc=3.0,
+                       zipf_term=1.05, seed=12)
+
+
+@functools.lru_cache(maxsize=None)
+def semmeddb():
+    from repro.data.synth_graph import make_semmeddb
+
+    return make_semmeddb(n_concepts=5_000, n_csemtypes=6_000,
+                         n_predications=10_000, n_sentences=40_000, seed=13)
+
+
+@functools.lru_cache(maxsize=None)
+def gqfast_db(which: str):
+    from repro.core.engine import GQFastDatabase
+
+    schema = {"m": pubmed_m, "ms": pubmed_ms, "sem": semmeddb}[which]()
+    return GQFastDatabase(schema, account_space=True, keep_packed=True)

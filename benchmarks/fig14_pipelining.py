@@ -1,0 +1,46 @@
+"""Paper Fig. 14/17: pipelining vs materializing intermediate results.
+
+The frontier engine never materializes join paths; OMC-denseID materializes
+every hop. Queries AS/AD with seeds of increasing fan-out (the paper's A1..A5 /
+D1..D5) show the materialized engine's time growing with intermediate size
+while the pipelined engine stays flat."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import GQFastEngine
+from repro.core.planner import plan_query
+from repro.core.reference import NumpyQueryEngine
+from repro.core.sql import parse
+from repro.data import synth_graph as SG
+
+from .common import emit, gqfast_db, pubmed_m, timeit
+
+
+def _seeds_by_fanout(schema, rel: str, key: str, n: int) -> list[int]:
+    col = schema.relationships[rel].columns[key]
+    counts = np.bincount(col)
+    order = np.argsort(counts)
+    # spread from light to heavy seeds
+    picks = [order[int(f * (len(order) - 1))] for f in np.linspace(0.45, 0.92, n)]
+    return [int(p) for p in picks]
+
+
+def run() -> None:
+    schema = pubmed_m()
+    db = gqfast_db("m")
+    gq = GQFastEngine(db)
+    omc = NumpyQueryEngine(schema, lookup="index")
+    plan = plan_query(schema, parse(SG.QUERY_AS))
+    pq = gq.prepare(SG.QUERY_AS)
+    for i, a in enumerate(_seeds_by_fanout(schema, "DA", "Author", 5)):
+        t_gq = timeit(lambda: np.asarray(pq(a0=a)), iters=3)
+        t_omc = timeit(omc.execute_plan, plan, {"a0": a}, iters=2, warmup=0)
+        elems = omc.stats.materialized_elements
+        emit(f"fig14/AS/A{i+1}/pipelined", t_gq * 1e6,
+             f"materialized_elems={elems} ratio={t_omc/t_gq:.1f}")
+        emit(f"fig14/AS/A{i+1}/materialized", t_omc * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

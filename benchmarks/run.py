@@ -1,0 +1,60 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark harness: python -m benchmarks.run [table3 table4 ...]
+
+Each module reproduces one paper table/figure (DESIGN.md §8); the roofline
+summary reads the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+from __future__ import annotations
+
+import sys
+import time
+
+
+def main() -> None:
+    from . import (
+        fig14_pipelining,
+        perf_baseline,
+        fig15_parallel,
+        table3_runtime,
+        table4_space,
+        table56_denseid,
+        table8_encodings,
+        table9_decode,
+    )
+
+    suites = {
+        "table3": table3_runtime.run,
+        "table4": table4_space.run,
+        "table56": table56_denseid.run,
+        "fig14": fig14_pipelining.run,
+        "table8": table8_encodings.run,
+        "table9": table9_decode.run,
+        "fig15": fig15_parallel.run,
+        "perf": perf_baseline.run,
+    }
+    picked = sys.argv[1:] or list(suites)
+    print("name,us_per_call,derived")
+    for name in picked:
+        t0 = time.time()
+        try:
+            suites[name]()
+        except Exception as e:  # noqa: BLE001
+            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
+        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+    # roofline summary (if dry-run artifacts exist)
+    try:
+        from repro.roofline.analysis import load_records, roofline_from_record
+
+        for rec in load_records("artifacts/dryrun"):
+            if rec.get("status") != "ok" or rec.get("variant"):
+                continue
+            rl = roofline_from_record(rec)
+            print(
+                f"roofline/{rec['arch']}/{rec['shape']}/{rec['mesh']},"
+                f"{rl.bound_s*1e6:.1f},dominant={rl.dominant}"
+            )
+    except Exception as e:  # noqa: BLE001
+        print(f"roofline/ERROR,0,{e}")
+
+
+if __name__ == "__main__":
+    main()

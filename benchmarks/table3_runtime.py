@@ -1,0 +1,57 @@
+"""Paper Table 3: end-to-end query runtime — GQ-Fast (compiled frontier) vs
+OMC (two-copy sorted, vectorized materializing) vs OMC-binary (binary-search
+lookups) vs PMC (whole-column scans). Synthetic Zipf datasets at CPU scale;
+the *ratios* are the reproduction target."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import GQFastEngine
+from repro.core.planner import plan_query
+from repro.core.reference import NumpyQueryEngine
+from repro.core.sql import parse
+from repro.data import synth_graph as SG
+
+from .common import emit, gqfast_db, pubmed_m, pubmed_ms, semmeddb, timeit
+
+# head (popular, zipf-rank ≈ top) and tail seeds: the paper's observation that
+# speedups are fanout-sensitive (§7.2 "high fanout is favorable to GQ-Fast")
+CASES = [
+    ("SD_head", SG.QUERY_SD, {"d0": 11}),
+    ("SD_tail", SG.QUERY_SD, {"d0": 997}),
+    ("FSD_head", SG.QUERY_FSD, {"d0": 11}),
+    ("AD_head", SG.QUERY_AD, {"t1": 3, "t2": 9}),
+    ("FAD_head", SG.QUERY_FAD, {"t1": 3, "t2": 9}),
+    ("AS_head", SG.QUERY_AS, {"a0": 17}),
+    ("AS_tail", SG.QUERY_AS, {"a0": 900}),
+]
+
+
+def run() -> None:
+    for ds_name, schema_fn, db_key, cases in [
+        ("pubmed-m", pubmed_m, "m", CASES),
+        ("pubmed-ms", pubmed_ms, "ms", CASES),
+        ("semmeddb", semmeddb, "sem", [("CS_head", SG.QUERY_CS, {"c0": 2}), ("CS_tail", SG.QUERY_CS, {"c0": 230})]),
+    ]:
+        schema = schema_fn()
+        db = gqfast_db(db_key)
+        gq = GQFastEngine(db, strategy="auto")  # the engine's real behavior
+        omc = NumpyQueryEngine(schema, lookup="index")
+        omc_bin = NumpyQueryEngine(schema, lookup="binary")
+        pmc = NumpyQueryEngine(schema, lookup="scan")
+        for qname, sql, params in cases:
+            plan = plan_query(schema, parse(sql))
+            pq = gq.prepare(sql)
+            t_gq = timeit(lambda: np.asarray(pq(**params)))
+            t_omc = timeit(omc.execute_plan, plan, params, iters=3)
+            t_bin = timeit(omc_bin.execute_plan, plan, params, iters=3)
+            t_pmc = timeit(pmc.execute_plan, plan, params, iters=3, warmup=1)
+            emit(f"table3/{ds_name}/{qname}/gqfast", t_gq * 1e6,
+                 f"omc_ratio={t_omc/t_gq:.1f} pmc_ratio={t_pmc/t_gq:.1f}")
+            emit(f"table3/{ds_name}/{qname}/omc", t_omc * 1e6, "")
+            emit(f"table3/{ds_name}/{qname}/omc_binary", t_bin * 1e6, "")
+            emit(f"table3/{ds_name}/{qname}/pmc", t_pmc * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Paper Tables 5 + 6: the dense-IDs ablations.
+
+Table 5 — fragment lookup: direct offset-table indexing (dense IDs) vs binary
+search on the sorted key column (GQ-Fast-UA vs GQ-Fast-UA(Binary)).
+Table 6 — final aggregation: dense γ¹ array vs hash-style grouping
+(GQ-Fast-UA vs GQ-Fast-UA(Map))."""
+from __future__ import annotations
+
+from repro.core.planner import plan_query
+from repro.core.reference import NumpyQueryEngine
+from repro.core.sql import parse
+from repro.data import synth_graph as SG
+
+from .common import emit, pubmed_m, semmeddb, timeit
+
+CASES = [
+    ("SD", SG.QUERY_SD, {"d0": 997}, pubmed_m),
+    ("FSD", SG.QUERY_FSD, {"d0": 997}, pubmed_m),
+    ("AD", SG.QUERY_AD, {"t1": 30, "t2": 50}, pubmed_m),
+    ("AS", SG.QUERY_AS, {"a0": 900}, pubmed_m),
+    ("CS", SG.QUERY_CS, {"c0": 230}, semmeddb),
+]
+
+
+def run() -> None:
+    for qname, sql, params, schema_fn in CASES:
+        schema = schema_fn()
+        plan = plan_query(schema, parse(sql))
+        direct = NumpyQueryEngine(schema, lookup="index", agg="dense")
+        binary = NumpyQueryEngine(schema, lookup="binary", agg="dense")
+        hashag = NumpyQueryEngine(schema, lookup="index", agg="hash")
+        t_d = timeit(direct.execute_plan, plan, params, iters=5)
+        t_b = timeit(binary.execute_plan, plan, params, iters=5)
+        t_h = timeit(hashag.execute_plan, plan, params, iters=5)
+        emit(f"table5/{qname}/direct", t_d * 1e6, f"binary_saving={1-t_d/max(t_b,1e-12):.2%}")
+        emit(f"table5/{qname}/binary", t_b * 1e6, "")
+        emit(f"table6/{qname}/dense_agg", t_d * 1e6, f"map_saving={1-t_d/max(t_h,1e-12):.2%}")
+        emit(f"table6/{qname}/hash_agg", t_h * 1e6, "")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,41 @@
+"""Paper Table 8: encoded column sizes under UA/BCA/BB/Huffman (+DictBCA, the
+TPU substitute) on the PubMed-MS-shaped dataset. Bold-winner per column should
+match the Fig.-12 chooser."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import codecs as C
+from repro.core.fragments import build_index
+
+from .common import emit, pubmed_ms
+
+
+def run() -> None:
+    schema = pubmed_ms()
+    for rel_name, key, col in [
+        ("DT", "Term", "Doc"),   # dt2.Doc
+        ("DT", "Doc", "Term"),   # dt1.Term
+        ("DT", "Doc", "Fre"),    # dt1.Fre
+        ("DT", "Term", "Fre"),   # dt2.Fre
+        ("DA", "Author", "Doc"), # da1.Doc
+        ("DA", "Doc", "Author"), # da2.Author
+    ]:
+        rel = schema.relationships[rel_name]
+        sizes = {}
+        for enc in ("UA", "BCA", "BB", "Huffman", "DictBCA"):
+            if enc == "BB" and col in rel.measures:
+                continue  # bitmaps need unique values (paper Table 8 N/A)
+            idx = build_index(schema, rel, key, encodings={col: enc},
+                              keep_packed=False, account_space=True)
+            sizes[enc] = idx.columns[col].encoded_bytes
+        best = min(sizes, key=sizes.__getitem__)
+        chosen = build_index(schema, rel, key, keep_packed=False,
+                             account_space=True).columns[col].encoding
+        for enc, b in sizes.items():
+            emit(f"table8/{rel_name}.{key}/{col}/{enc}", b,
+                 f"best={best} chooser={chosen}" if enc == best else "")
+
+
+if __name__ == "__main__":
+    run()

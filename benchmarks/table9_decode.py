@@ -1,0 +1,71 @@
+"""Paper Tables 9/10: decompression throughput.
+
+BCA decode via (a) the Pallas bitunpack kernel (interpret mode on CPU — the
+structural path; TPU is the target), (b) the pure-XLA oracle, (c) numpy host
+codec; Huffman/DictBCA host decode for the measure-column regime. Reports
+values/s; the paper's observation to reproduce: Huffman is CPU-bound and
+order-of-magnitude slower than bit-aligned decode on FK columns, and bitmaps
+win on dense unique fragments."""
+from __future__ import annotations
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from repro.core import codecs as C
+from repro.kernels import ops
+
+from .common import emit, timeit
+
+
+def run() -> None:
+    rng = np.random.default_rng(0)
+    # FK-column regime: large domain, unique-ish values (paper Table 9)
+    domain = 1_000_000_000
+    n = 100_000
+    vals = rng.integers(0, domain, n)
+    width = C.bits_needed(domain)
+    raw = C.pack_bits(vals, width).tobytes()
+    raw += b"\0" * ((-len(raw)) % 4)
+    packed = jnp.asarray(np.frombuffer(raw, dtype=np.uint32))
+
+    t = timeit(lambda: np.asarray(ops.bitunpack(packed, width, n, use_pallas=False)))
+    emit("table9/fk/bca_xla", t * 1e6, f"vals_per_s={n/t:.3e}")
+    t = timeit(lambda: np.asarray(ops.bitunpack(packed, width, n)), iters=3)
+    emit("table9/fk/bca_pallas_interpret", t * 1e6, f"vals_per_s={n/t:.3e} (CPU interpret; TPU target)")
+    bca = C.BCACodec(domain)
+    buf = bca.encode(vals)
+    t = timeit(lambda: bca.decode(buf, n), iters=3)
+    emit("table9/fk/bca_numpy", t * 1e6, f"vals_per_s={n/t:.3e}")
+
+    hc = C.HuffmanCodec(rng.zipf(1.5, 50_000).astype(np.int64) % 65536)
+    frag = hc.sym[rng.integers(0, len(hc.sym), 20_000)]
+    hbuf = hc.encode(frag)
+    t = timeit(lambda: hc.decode(hbuf, len(frag)), iters=2, warmup=1)
+    emit("table9/fk/huffman_host", t * 1e6, f"vals_per_s={len(frag)/t:.3e}")
+
+    # measure-column regime: domain 100, Zipf (paper Table 10)
+    col = rng.zipf(1.5, 200_000).astype(np.int64) % 100
+    hc2 = C.HuffmanCodec(col)
+    frag2 = col[:100_000]
+    hbuf2 = hc2.encode(frag2)
+    t = timeit(lambda: hc2.decode(hbuf2, len(frag2)), iters=2, warmup=1)
+    emit("table10/measure/huffman_host", t * 1e6,
+         f"vals_per_s={len(frag2)/t:.3e} ratio={len(hbuf2)/ (8*len(frag2)):.3f}")
+    dc = C.DictBCACodec(col)
+    dbuf = dc.encode(frag2)
+    t = timeit(lambda: dc.decode(dbuf, len(frag2)), iters=3)
+    emit("table10/measure/dictbca_host", t * 1e6,
+         f"vals_per_s={len(frag2)/t:.3e} ratio={len(dbuf)/(8*len(frag2)):.3f}")
+    # DictBCA on-device decode path (bitunpack + gather)
+    draw = dbuf + b"\0" * ((-len(dbuf)) % 4)
+    dwords = jnp.asarray(np.frombuffer(draw, dtype=np.uint32))
+    dictionary = jnp.asarray(dc.dictionary)
+    t = timeit(lambda: np.asarray(
+        jnp.take(dictionary, ops.bitunpack(dwords, dc.width, len(frag2), use_pallas=False))
+    ))
+    emit("table10/measure/dictbca_xla", t * 1e6, f"vals_per_s={len(frag2)/t:.3e}")
+
+
+if __name__ == "__main__":
+    run()

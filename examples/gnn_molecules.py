@@ -1,0 +1,54 @@
+"""Train EGNN (or any assigned GNN) on synthetic molecule energies.
+
+    PYTHONPATH=src python examples/gnn_molecules.py [--arch egnn|schnet|mace|equiformer_v2]
+"""
+import argparse
+
+import jax
+
+from repro.data.graphs import make_molecule_batch
+from repro.models.gnn.models import GNNConfig, gnn_init, gnn_loss
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train
+
+CFGS = {
+    "egnn": GNNConfig("egnn", "egnn", n_layers=4, d_hidden=64),
+    "schnet": GNNConfig("schnet", "schnet", n_layers=3, d_hidden=64, n_rbf=32, cutoff=8.0),
+    "mace": GNNConfig("mace", "mace", n_layers=2, d_hidden=32, l_max=2,
+                      correlation=3, n_rbf=8, cutoff=6.0),
+    "equiformer_v2": GNNConfig("eqv2", "equiformer_v2", n_layers=2, d_hidden=32,
+                               l_max=3, m_max=2, n_heads=4, n_rbf=8, cutoff=6.0),
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="egnn", choices=list(CFGS))
+    ap.add_argument("--steps", type=int, default=60)
+    args = ap.parse_args()
+
+    cfg = CFGS[args.arch]
+    params = gnn_init(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"{args.arch}: {n/1e3:.0f}k params")
+
+    batches = [make_molecule_batch(batch=16, n_nodes=12, n_edges=32, seed=s).as_inputs()
+               for s in range(8)]
+
+    params, res = train(
+        params,
+        lambda p, b: gnn_loss(p, b, cfg, 16),
+        lambda step: batches[step % len(batches)],
+        TrainLoopConfig(total_steps=args.steps, ckpt_every=1000,
+                        ckpt_dir="/tmp/repro_gnn_ckpt"),
+        AdamWConfig(lr=3e-3, weight_decay=0.0),
+        resume=False,
+    )
+    hist = res.history
+    for rec in hist[:: max(1, len(hist) // 8)]:
+        print(f"  step {rec['step']:3d} loss {rec['loss']:.4f}")
+    print(f"final {hist[-1]['loss']:.4f} (start {hist[0]['loss']:.4f})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,50 @@
+"""DIN recsys: train on a synthetic click stream, then run the retrieval
+shape (one user scored against many candidates).
+
+    PYTHONPATH=src python examples/recsys_din.py
+"""
+import time
+
+import jax
+import numpy as np
+
+from repro.data.recsys import make_din_batch
+from repro.models.din import DINConfig, din_init, din_loss, din_retrieval_scores
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import TrainLoopConfig, train
+
+
+def main() -> None:
+    cfg = DINConfig(n_items=100_000, n_users=10_000, n_cates=1_000, seq_len=50)
+    params = din_init(cfg, jax.random.key(0))
+    n = sum(x.size for x in jax.tree.leaves(params))
+    print(f"DIN: {n/1e6:.1f}M params (embedding tables dominate)")
+
+    params, res = train(
+        params,
+        lambda p, b: din_loss(p, b, cfg),
+        lambda step: make_din_batch(256, seq_len=50, n_items=cfg.n_items,
+                                    n_users=cfg.n_users, seed=step % 16),
+        TrainLoopConfig(total_steps=40, ckpt_every=1000, ckpt_dir="/tmp/repro_din_ckpt"),
+        AdamWConfig(lr=3e-3, weight_decay=0.0),
+        resume=False,
+    )
+    hist = res.history
+    for rec in hist[::8]:
+        print(f"  step {rec['step']:3d} loss {rec['loss']:.4f}")
+
+    # retrieval: 1 user × 100k candidates, batched dot-style scoring (no loop)
+    rb = make_din_batch(1, seq_len=50, n_items=cfg.n_items, n_users=cfg.n_users,
+                        n_candidates=100_000, seed=99)
+    f = jax.jit(lambda p, b: din_retrieval_scores(p, b, cfg))
+    scores = np.asarray(f(params, rb))  # compile + run
+    t0 = time.perf_counter()
+    scores = np.asarray(f(params, rb))
+    dt = time.perf_counter() - t0
+    top = np.argsort(-scores)[:5]
+    print(f"retrieval: scored 100k candidates in {dt*1e3:.1f} ms "
+          f"({1e5/dt/1e6:.1f}M cand/s); top-5 items: {top.tolist()}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+"""repro: GQ-Fast (Fast In-Memory SQL Analytics on Graphs) on JAX/TPU."""
+__version__ = "0.1.0"

@@ -1,0 +1,121 @@
+"""Checkpoint manager: atomic, retained, mesh-elastic.
+
+Layout:  <dir>/step_<n>/arrays.npz + meta.json   (tmp-dir + os.rename = atomic)
+
+Restore resharding: checkpoints store *logical* arrays; ``restore`` device_puts
+them under whatever mesh/shardings the restarted job passes — a job restarted
+on a different mesh shape (elastic scaling, failed-node replacement) resumes
+from the same logical state. Retention keeps the newest k checkpoints.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = SEP.join(_path_str(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _path_str(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return f"[{p.idx}]"
+    return str(p)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+
+    # ------------------------------------------------------------------
+    def save(self, step: int, tree, extra_meta: dict | None = None) -> str:
+        flat = _flatten(tree)
+        treedef = jax.tree_util.tree_structure(tree)
+        final = os.path.join(self.dir, f"step_{step:010d}")
+        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_ckpt_")
+        try:
+            np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+            meta = {
+                "step": step,
+                "treedef": str(treedef),
+                "keys": sorted(flat),
+                "time": time.time(),
+                **(extra_meta or {}),
+            }
+            with open(os.path.join(tmp, "meta.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(final):
+                shutil.rmtree(final)
+            os.rename(tmp, final)  # atomic publish
+        except BaseException:
+            shutil.rmtree(tmp, ignore_errors=True)
+            raise
+        self._retain()
+        return final
+
+    def _retain(self) -> None:
+        steps = self.list_steps()
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+
+    def list_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_"):
+                try:
+                    out.append(int(name.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> int | None:
+        steps = self.list_steps()
+        return steps[-1] if steps else None
+
+    # ------------------------------------------------------------------
+    def restore(self, template, step: int | None = None, shardings=None):
+        """Restore into the structure of ``template`` (a pytree of arrays or
+        ShapeDtypeStructs). ``shardings``: matching pytree of NamedShardings
+        for elastic placement on the current mesh."""
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        data = np.load(os.path.join(path, "arrays.npz"))
+        leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
+        keys = [SEP.join(_path_str(p) for p in path_) for path_, _ in leaves_t]
+        arrays = [data[k] for k in keys]
+        if shardings is not None:
+            sh_leaves = jax.tree_util.tree_leaves(
+                shardings, is_leaf=lambda x: x is None or hasattr(x, "spec")
+            )
+            arrays = [
+                jax.device_put(a, s) if s is not None else jax.device_put(a)
+                for a, s in zip(arrays, sh_leaves)
+            ]
+        else:
+            arrays = [jax.device_put(a) for a in arrays]
+        tree = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(template), arrays
+        )
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        return tree, meta

@@ -1,0 +1,39 @@
+"""Config protocol: every architecture exposes cells (arch × shape) that the
+dry-run lowers and the smoke tests run reduced."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+@dataclass
+class Cell:
+    """One (arch × shape) lowering unit."""
+
+    arch_id: str
+    shape_id: str
+    fn: Callable  # pure function to jit
+    args: tuple  # pytrees of jax.ShapeDtypeStruct (no allocation)
+    in_shardings: tuple  # matching pytrees of NamedSharding
+    out_shardings: Any = None
+    kind: str = "train"  # train | prefill | decode | serve
+    model_flops: float | None = None  # 6·N·D convention (see EXPERIMENTS.md)
+    notes: str = ""
+
+
+class ArchConfig:
+    arch_id: str = ""
+    kind: str = ""
+    shape_ids: list[str] = []
+
+    def skip_reason(self, shape_id: str) -> str | None:
+        return None
+
+    def make_cell(self, shape_id: str, mesh, variant: str = "") -> Cell:
+        """variant='' is the optimized default; 'naive' disables the
+        beyond-baseline optimizations (§Perf before/after)."""
+        raise NotImplementedError
+
+    def smoke(self) -> dict:
+        """Run a reduced config end-to-end on CPU; returns metrics to assert."""
+        raise NotImplementedError

@@ -1,0 +1,129 @@
+"""DIN recsys arch config × the four assigned serving/training shapes."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..dist.sharding import named, recsys_batch_shardings, recsys_state_shardings
+from ..models.din import (
+    DINConfig,
+    din_forward,
+    din_init,
+    din_loss,
+    din_retrieval_scores,
+)
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from .base import ArchConfig, Cell
+
+
+def _pad512(n: int) -> int:
+    return -(-n // 512) * 512
+
+
+DIN_SHAPES = {
+    "train_batch": dict(batch=65536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve"),
+    "serve_bulk": dict(batch=262144, kind="serve"),
+    "retrieval_cand": dict(batch=1, candidates=_pad512(1_000_000), kind="retrieval"),
+}
+
+
+class DINArch(ArchConfig):
+    kind = "recsys"
+    shape_ids = list(DIN_SHAPES)
+
+    def __init__(self):
+        self.arch_id = "din"
+        self.full = DINConfig()  # embed_dim 18, seq 100, 80-40 attn, 200-80 mlp
+        self.smoke_cfg = DINConfig(n_items=5000, n_users=500, n_cates=50, seq_len=16)
+        self.opt = AdamWConfig(lr=1e-3, weight_decay=0.0)
+
+    def make_cell(self, shape_id: str, mesh, variant: str = "") -> Cell:
+        sh = DIN_SHAPES[shape_id]
+        cfg = self.full
+        B, T = sh["batch"], cfg.seq_len
+        f32, i32 = jnp.float32, jnp.int32
+        params_abs = jax.eval_shape(lambda: din_init(cfg, jax.random.key(0)))
+
+        if sh["kind"] == "train":
+            batch_abs = {
+                "user": jax.ShapeDtypeStruct((B,), i32),
+                "hist_items": jax.ShapeDtypeStruct((B, T), i32),
+                "hist_mask": jax.ShapeDtypeStruct((B, T), f32),
+                "cand_item": jax.ShapeDtypeStruct((B,), i32),
+                "label": jax.ShapeDtypeStruct((B,), i32),
+            }
+            opt_abs = jax.eval_shape(functools.partial(adamw_init, cfg=self.opt), params_abs)
+            state_abs = (params_abs, opt_abs)
+
+            def fn(state, batch):
+                params, opt_state = state
+                (loss, metrics), grads = jax.value_and_grad(
+                    lambda p: din_loss(p, batch, cfg), has_aux=True
+                )(params)
+                params, opt_state, om = adamw_update(grads, opt_state, params, self.opt)
+                return (params, opt_state), {**metrics, **om}
+
+            return Cell(self.arch_id, shape_id, fn, (state_abs, batch_abs),
+                        (recsys_state_shardings(state_abs, mesh),
+                         recsys_batch_shardings(batch_abs, mesh)),
+                        None, "train", 6.0 * cfg.active_param_count() * B)
+
+        if sh["kind"] == "serve":
+            batch_abs = {
+                "user": jax.ShapeDtypeStruct((B,), i32),
+                "hist_items": jax.ShapeDtypeStruct((B, T), i32),
+                "hist_mask": jax.ShapeDtypeStruct((B, T), f32),
+                "cand_item": jax.ShapeDtypeStruct((B,), i32),
+            }
+
+            def fn(params, batch):
+                return din_forward(params, batch, cfg)
+
+            return Cell(self.arch_id, shape_id, fn, (params_abs, batch_abs),
+                        (recsys_state_shardings(params_abs, mesh),
+                         recsys_batch_shardings(batch_abs, mesh)),
+                        None, "serve", 2.0 * cfg.active_param_count() * B)
+
+        NC = sh["candidates"]
+        batch_abs = {
+            "user": jax.ShapeDtypeStruct((1,), i32),
+            "hist_items": jax.ShapeDtypeStruct((1, T), i32),
+            "hist_mask": jax.ShapeDtypeStruct((1, T), f32),
+            "cand_items": jax.ShapeDtypeStruct((NC,), i32),
+        }
+
+        def fn(params, batch):
+            return din_retrieval_scores(params, batch, cfg)
+
+        return Cell(self.arch_id, shape_id, fn, (params_abs, batch_abs),
+                    (recsys_state_shardings(params_abs, mesh),
+                     recsys_batch_shardings(batch_abs, mesh)),
+                    None, "serve", 2.0 * cfg.active_param_count() * NC)
+
+    def smoke(self) -> dict:
+        from ..data.recsys import make_din_batch
+
+        cfg = self.smoke_cfg
+        params = din_init(cfg, jax.random.key(0))
+        b = make_din_batch(16, seq_len=cfg.seq_len, n_items=cfg.n_items, n_users=cfg.n_users)
+        opt = adamw_init(params, self.opt)
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: din_loss(p, b, cfg), has_aux=True
+        )(params)
+        params2, _, om = adamw_update(grads, opt, params, self.opt)
+        rb = make_din_batch(1, seq_len=cfg.seq_len, n_items=cfg.n_items,
+                            n_users=cfg.n_users, n_candidates=256)
+        scores = din_retrieval_scores(params, rb, cfg)
+        return {
+            "loss": float(loss),
+            "scores_shape": tuple(scores.shape),
+            "finite": bool(jnp.isfinite(loss)) and bool(jnp.isfinite(scores).all())
+            and all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(params2)),
+        }
+
+
+DIN = DINArch()

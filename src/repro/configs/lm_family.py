@@ -1,0 +1,210 @@
+"""LM-family arch configs: one class covers the five assigned transformers.
+
+Shapes (per assignment): train_4k (train_step), prefill_32k (prefill),
+decode_32k (serve_step: one token against a 32k KV cache), long_500k (skipped:
+all five assigned LM archs are pure full attention — DESIGN.md §5)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.sharding import (
+    kv_cache_shardings,
+    lm_batch_shardings,
+    lm_state_shardings,
+    named,
+)
+from ..models import transformer as T
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+from .base import ArchConfig, Cell
+
+LM_SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train", micro=8),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+class LMArch(ArchConfig):
+    kind = "lm"
+    shape_ids = list(LM_SHAPES)
+
+    def __init__(self, arch_id: str, full: T.TransformerConfig,
+                 smoke_cfg: T.TransformerConfig, opt: AdamWConfig | None = None):
+        self.arch_id = arch_id
+        self.full = full
+        self.smoke_cfg = smoke_cfg
+        self.opt = opt or AdamWConfig(lr=1e-4)
+
+    def skip_reason(self, shape_id: str) -> str | None:
+        if shape_id == "long_500k":
+            return ("pure full-attention architecture: 500k-token decode requires "
+                    "sub-quadratic attention; skipped per shape directive (DESIGN.md §5)")
+        return None
+
+    # ------------------------------------------------------------------
+    def make_cell(self, shape_id: str, mesh, variant: str = "") -> Cell:
+        sh = LM_SHAPES[shape_id]
+        tp = mesh.shape.get("model", 1)
+        naive = variant == "naive"
+        cfg = dataclasses.replace(self.full.pad_heads(tp), seq_shard=not naive)
+        S, B, kind = sh["seq"], sh["batch"], sh["kind"]
+        micro = 1 if naive else sh.get("micro", 8)  # grad-accum microbatches
+        if variant == "micro16":
+            micro = 16
+
+        params_abs = jax.eval_shape(lambda: T.init_params(cfg, jax.random.key(0)))
+
+        if kind == "train":
+            opt_abs = jax.eval_shape(
+                functools.partial(adamw_init, cfg=self.opt), params_abs
+            )
+            state_abs = (params_abs, opt_abs)
+            batch_abs = {
+                "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+                "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            }
+            param_sh = lm_state_shardings(params_abs, mesh, cfg.n_kv_heads)
+
+            def constrain_like_params(tree):
+                # keep fp32 grad accumulators in the FSDP layout — without this
+                # the scan carry is free to replicate (dry-run: arctic 3.9TB/dev)
+                return jax.tree.map(
+                    lambda g, sh: jax.lax.with_sharding_constraint(g, sh),
+                    tree, param_sh,
+                )
+
+            def fn(state, batch):
+                params, opt_state = state
+                tb = batch["tokens"].reshape(micro, B // micro, S)
+                lb = batch["labels"].reshape(micro, B // micro, S)
+
+                def one(p, t, l):
+                    return jax.value_and_grad(
+                        lambda pp: T.loss_fn(pp, {"tokens": t, "labels": l}, cfg),
+                        has_aux=True,
+                    )(p)
+
+                if micro == 1:
+                    (loss, metrics), grads = one(params, tb[0], lb[0])
+                    grads = constrain_like_params(grads)
+                else:
+                    # gradient accumulation: bounds activation memory to one
+                    # microbatch; grads accumulate fp32 in the FSDP layout
+                    def mstep(carry, tl):
+                        gacc, lacc, aacc = carry
+                        (loss, metrics), g = one(params, *tl)
+                        # constrain at production: the MoE 2-axis expert layout
+                        # otherwise materializes full fp32 grads (3.9 TB/dev)
+                        g = constrain_like_params(g)
+                        gacc = jax.tree.map(
+                            lambda a, b: a + b.astype(jnp.float32), gacc, g
+                        )
+                        gacc = constrain_like_params(gacc)
+                        return (gacc, lacc + metrics["loss"], aacc + metrics["moe_aux"]), None
+
+                    g0 = constrain_like_params(jax.tree.map(
+                        lambda x: jnp.zeros(x.shape, jnp.float32), params
+                    ))
+                    (grads, lsum, asum), _ = jax.lax.scan(
+                        mstep, (g0, jnp.float32(0), jnp.float32(0)), (tb, lb)
+                    )
+                    grads = jax.tree.map(lambda g: g / micro, grads)
+                    metrics = {"loss": lsum / micro, "moe_aux": asum / micro}
+                params, opt_state, om = adamw_update(
+                    grads, opt_state, params, self.opt, param_shardings=param_sh
+                )
+                return (params, opt_state), {**metrics, **om}
+
+            state_sh = lm_state_shardings(state_abs, mesh, cfg.n_kv_heads)
+            batch_sh = lm_batch_shardings(batch_abs, mesh)
+            from jax.sharding import PartitionSpec as P
+
+            metrics_abs = {"loss": 0, "moe_aux": 0, "grad_norm": 0}
+            out_sh = (state_sh, jax.tree.map(lambda _: named(mesh, P()), metrics_abs))
+            tokens = B * S
+            return Cell(self.arch_id, shape_id, fn, (state_abs, batch_abs),
+                        (state_sh, batch_sh), out_sh, "train",
+                        6.0 * cfg.active_param_count() * tokens,
+                        notes=f"micro={micro} seq_shard={cfg.seq_shard}")
+
+        if kind == "prefill":
+            batch_abs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+
+            def fn(params, batch):
+                logits, cache, _ = T.prefill(params, batch["tokens"], cfg, S)
+                return logits, cache
+
+            state_sh = lm_state_shardings(params_abs, mesh, cfg.n_kv_heads)
+            batch_sh = lm_batch_shardings(batch_abs, mesh)
+            cache_abs = jax.eval_shape(lambda: T.init_kv_cache(cfg, B, S))
+            from jax.sharding import PartitionSpec as P
+
+            out_sh = (named(mesh, P(("pod", "data"), "model")),
+                      kv_cache_shardings(cache_abs, mesh, cfg.n_kv_heads))
+            return Cell(self.arch_id, shape_id, fn, (params_abs, batch_abs),
+                        (state_sh, batch_sh), out_sh, "prefill",
+                        2.0 * cfg.active_param_count() * B * S)
+
+        # decode: one token, KV cache of length S
+        cache_abs = jax.eval_shape(lambda: T.init_kv_cache(cfg, B, S))
+        tok_abs = jax.ShapeDtypeStruct((B,), jnp.int32)
+        pos_abs = jax.ShapeDtypeStruct((), jnp.int32)
+
+        def fn(params, cache, tokens, pos):
+            return T.decode_step(params, cache, tokens, pos, cfg)
+
+        state_sh = lm_state_shardings(params_abs, mesh, cfg.n_kv_heads)
+        cache_sh = kv_cache_shardings(cache_abs, mesh, cfg.n_kv_heads)
+        batch_sh = lm_batch_shardings({"t": tok_abs}, mesh)["t"]
+        from jax.sharding import PartitionSpec as P
+
+        return Cell(self.arch_id, shape_id, fn,
+                    (params_abs, cache_abs, tok_abs, pos_abs),
+                    (state_sh, cache_sh, batch_sh, named(mesh, P())),
+                    None, "decode", 2.0 * cfg.active_param_count() * B)
+
+    # ------------------------------------------------------------------
+    def smoke(self) -> dict:
+        cfg = self.smoke_cfg
+        key = jax.random.key(0)
+        params = T.init_params(cfg, key)
+        toks = jax.random.randint(jax.random.key(1), (2, 64), 0, cfg.vocab)
+        batch = {"tokens": toks, "labels": toks}
+        opt = adamw_init(params, self.opt)
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: T.loss_fn(p, batch, cfg), has_aux=True
+        )(params)
+        params2, _, om = adamw_update(grads, opt, params, self.opt)
+        logits, cache, _ = T.prefill(params, toks, cfg, 96)
+        dl, cache2 = T.decode_step(params, cache, jnp.argmax(logits, -1).astype(jnp.int32),
+                                   jnp.int32(64), cfg)
+        checks = {
+            "loss": float(loss),
+            "grad_norm": float(om["grad_norm"]),
+            "logits_shape": tuple(dl.shape),
+            "finite": bool(jnp.isfinite(loss))
+            and bool(jnp.isfinite(dl).all())
+            and all(bool(jnp.isfinite(x).all()) for x in jax.tree.leaves(params2)),
+        }
+        return checks
+
+
+def _smoke_of(full: T.TransformerConfig) -> T.TransformerConfig:
+    moe = full.moe
+    if moe is not None:
+        moe = dataclasses.replace(moe, n_experts=8, top_k=min(moe.top_k, 2), d_ff_expert=64)
+    return dataclasses.replace(
+        full, n_layers=2, d_model=128, n_heads=4,
+        n_kv_heads=max(1, min(4, 4 * full.n_kv_heads // max(full.n_heads, 1)) or 1),
+        d_ff=256, vocab=512, d_head=32, moe=moe, remat=False,
+        attn_q_chunk=32, attn_kv_chunk=32,
+    )
+
+
+def make_lm_arch(arch_id: str, full: T.TransformerConfig, **kw) -> LMArch:
+    return LMArch(arch_id, full, _smoke_of(full), **kw)

@@ -1,0 +1,74 @@
+"""Pallas TPU kernel: bitmap intersection (paper §6.1 merge-intersection, θ=0).
+
+Word-wise AND over uint32 bitmap words (the on-device uncompressed form of the
+paper's byte-aligned bitmaps — DESIGN.md §2), plus a fused popcount reduction
+for cardinality. Pure VPU work with (8, 128)-aligned VMEM tiles.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROWS, LANES = 8, 128
+BLOCK_WORDS = ROWS * LANES
+
+
+def _and_kernel(a_ref, b_ref, out_ref):
+    out_ref[...] = a_ref[...] & b_ref[...]
+
+
+def _and_popcount_kernel(a_ref, b_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    w = a_ref[...] & b_ref[...]
+    out_ref[0, 0] += jnp.sum(jax.lax.population_count(w).astype(jnp.int32))
+
+
+def _pad2d(x: jnp.ndarray) -> tuple[jnp.ndarray, int]:
+    n = x.shape[0]
+    pad = (-n) % BLOCK_WORDS
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros(pad, x.dtype)])
+    return x.reshape(-1, LANES), (n + pad) // BLOCK_WORDS
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_and(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    n = a.shape[0]
+    a2, blocks = _pad2d(a)
+    b2, _ = _pad2d(b)
+    out = pl.pallas_call(
+        _and_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct(a2.shape, a.dtype),
+        interpret=interpret,
+    )(a2, b2)
+    return out.reshape(-1)[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def bitmap_and_popcount(a: jnp.ndarray, b: jnp.ndarray, interpret: bool = False) -> jnp.ndarray:
+    a2, blocks = _pad2d(a)
+    b2, _ = _pad2d(b)
+    out = pl.pallas_call(
+        _and_popcount_kernel,
+        grid=(blocks,),
+        in_specs=[
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+            pl.BlockSpec((ROWS, LANES), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        interpret=interpret,
+    )(a2, b2)
+    return out[0, 0]

@@ -1,0 +1,52 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+On the CPU container the kernels execute via ``interpret=True`` (Pallas body run
+as Python/XLA — the correctness validation mode mandated for this environment);
+on TPU they run compiled. ``use_pallas=False`` selects the pure-XLA fallback
+(identical math from :mod:`repro.kernels.ref`)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .bitmap_ops import bitmap_and as _bitmap_and
+from .bitmap_ops import bitmap_and_popcount as _bitmap_and_popcount
+from .bitunpack import bitunpack as _bitunpack
+from .fragment_spmv import fragment_spmv as _fragment_spmv
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def bitunpack(packed, width: int, count: int, use_pallas: bool = True):
+    if not use_pallas:
+        return ref.bitunpack_ref(jnp.asarray(packed, jnp.uint32), width, count)
+    return _bitunpack(jnp.asarray(packed, jnp.uint32), width, count, interpret=_interpret())
+
+
+def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int, use_pallas: bool = True):
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(src_ids, jnp.int32)
+    d = jnp.asarray(dst_ids, jnp.int32)
+    m = jnp.asarray(measures, jnp.float32)
+    if not use_pallas:
+        return ref.fragment_spmv_ref(w, s, d, m, n_dst)
+    return _fragment_spmv(w, s, d, m, n_dst, interpret=_interpret())
+
+
+def bitmap_and(a, b, use_pallas: bool = True):
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    if not use_pallas:
+        return ref.bitmap_and_ref(a, b)
+    return _bitmap_and(a, b, interpret=_interpret())
+
+
+def bitmap_and_popcount(a, b, use_pallas: bool = True):
+    a = jnp.asarray(a, jnp.uint32)
+    b = jnp.asarray(b, jnp.uint32)
+    if not use_pallas:
+        return ref.bitmap_and_popcount_ref(a, b)
+    return _bitmap_and_popcount(a, b, interpret=_interpret())

@@ -1,0 +1,52 @@
+"""Pure-jnp oracles for every Pallas kernel (allclose targets for the sweeps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bitunpack_ref(packed: jnp.ndarray, width: int, count: int) -> jnp.ndarray:
+    """Decode little-endian ``width``-bit values from uint32 words.
+
+    Value i occupies bits [i*width, (i+1)*width) of the word stream; a value may
+    straddle two words. Returns int32[count] (width <= 31 supported on-device;
+    the host codec handles wider)."""
+    idx = jnp.arange(count, dtype=jnp.uint32)
+    bit0 = idx * jnp.uint32(width)
+    w0 = (bit0 >> 5).astype(jnp.int32)
+    off = (bit0 & jnp.uint32(31)).astype(jnp.uint32)
+    lo = packed[w0]
+    hi = packed[jnp.minimum(w0 + 1, packed.shape[0] - 1)]
+    # 64-bit-free double-word extraction: value = (lo >> off) | (hi << (32-off)),
+    # with the straddle term vanishing under the width mask when off == 0 or the
+    # value fits entirely in ``lo``.
+    word = jnp.where(off == 0, lo, (lo >> off) | _safe_shl(hi, jnp.uint32(32) - off))
+    mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
+    return (word & mask).astype(jnp.int32)
+
+
+def _safe_shl(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
+    """x << s with s possibly 32 (→ 0), avoiding UB on 32-bit shifts."""
+    return jnp.where(s >= 32, jnp.uint32(0), x << (s & jnp.uint32(31)))
+
+
+def fragment_spmv_ref(
+    weights: jnp.ndarray,  # f32[n_src]
+    src_ids: jnp.ndarray,  # i32[E]
+    dst_ids: jnp.ndarray,  # i32[E]
+    measures: jnp.ndarray,  # f32[E]
+    n_dst: int,
+) -> jnp.ndarray:
+    """One relationship hop: y[dst] = Σ_edges w[src] · m (the frontier SpMV)."""
+    ew = jnp.take(weights, src_ids) * measures
+    return jax.ops.segment_sum(ew, dst_ids, num_segments=n_dst)
+
+
+def bitmap_and_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Word-wise AND of two uint32 bitmap word arrays."""
+    return a & b
+
+
+def bitmap_and_popcount_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """Total set bits of (a & b) — merge-intersection cardinality (paper §6.1)."""
+    return jnp.sum(jax.lax.population_count(a & b).astype(jnp.int32))

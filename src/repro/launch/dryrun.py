@@ -1,0 +1,148 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell on the
+production mesh with 512 placeholder host devices (the two lines above MUST
+run before any jax import — jax locks device count at first init).
+
+Per cell: ``jax.jit(fn, in_shardings, out_shardings).lower(*abstract_args)
+.compile()`` then record memory_analysis / cost_analysis / per-collective
+bytes parsed from the compiled HLO into artifacts/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch llama3-8b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse  # noqa: E402
+import json  # noqa: E402
+import re  # noqa: E402
+import time  # noqa: E402
+import traceback  # noqa: E402
+
+
+def run_cell(arch_id: str, shape_id: str, multi_pod: bool, out_dir: str,
+             skip_existing: bool = False, variant: str = "") -> dict:
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.launch.mesh import make_production_mesh
+    from repro.roofline.analysis import collective_bytes_from_hlo
+
+    mesh_name = "multipod_2x16x16" if multi_pod else "pod_16x16"
+    cell_name = f"{arch_id}__{shape_id}__{mesh_name}" + (f"__{variant}" if variant else "")
+    path = os.path.join(out_dir, f"{cell_name}.json")
+    if skip_existing and os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+
+    arch = get_arch(arch_id)
+    rec: dict = {
+        "arch": arch_id, "shape": shape_id, "mesh": mesh_name, "variant": variant,
+        "time": time.time(),
+    }
+    skip = arch.skip_reason(shape_id)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        _write(path, rec)
+        return rec
+
+    try:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        t0 = time.time()
+        # cell construction OUTSIDE the mesh context: under set_mesh, plain
+        # jnp.asarray replicates real arrays across all 512 placeholder devices
+        cell = arch.make_cell(shape_id, mesh, variant)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(
+                cell.fn,
+                in_shardings=cell.in_shardings,
+                out_shardings=cell.out_shardings,
+            )
+            lowered = jitted.lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+
+            mem = compiled.memory_analysis()
+            cost = compiled.cost_analysis()
+            hlo = compiled.as_text()
+            coll = collective_bytes_from_hlo(hlo)
+
+        rec.update(
+            status="ok",
+            kind=cell.kind,
+            model_flops=cell.model_flops,
+            notes=cell.notes,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=_mem_dict(mem),
+            flops=float(cost.get("flops", 0.0)) if cost else 0.0,
+            bytes_accessed=float(cost.get("bytes accessed", 0.0)) if cost else 0.0,
+            collectives=coll,
+        )
+        print(f"[dryrun] {cell_name}: OK  lower {t_lower:.1f}s compile {t_compile:.1f}s "
+              f"flops/dev {rec['flops']:.3e} bytes/dev {rec['bytes_accessed']:.3e} "
+              f"coll {sum(coll.values()):.3e}B")
+        print(f"  memory_analysis: {rec['memory']}")
+    except Exception as e:  # noqa: BLE001 — a failing cell is a bug to record
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   tb=traceback.format_exc()[-4000:])
+        print(f"[dryrun] {cell_name}: ERROR {type(e).__name__}: {e}")
+    _write(path, rec)
+    return rec
+
+
+def _mem_dict(mem) -> dict:
+    out = {}
+    for attr in ("temp_size_in_bytes", "argument_size_in_bytes",
+                 "output_size_in_bytes", "alias_size_in_bytes",
+                 "generated_code_size_in_bytes"):
+        try:
+            out[attr] = int(getattr(mem, attr))
+        except Exception:
+            pass
+    return out
+
+
+def _write(path: str, rec: dict) -> None:
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--variant", default="")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    args = ap.parse_args()
+
+    from repro.configs.registry import ARCHS, all_cells
+
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    if args.all:
+        cells = all_cells()
+    else:
+        assert args.arch, "--arch required unless --all"
+        shapes = [args.shape] if args.shape else ARCHS[args.arch].shape_ids
+        cells = [(args.arch, s) for s in shapes]
+
+    results = []
+    for mp in meshes:
+        for aid, sid in cells:
+            results.append(run_cell(aid, sid, mp, args.out, args.skip_existing, args.variant))
+    ok = sum(1 for r in results if r["status"] == "ok")
+    sk = sum(1 for r in results if r["status"] == "skipped")
+    err = [r for r in results if r["status"] == "error"]
+    print(f"\n[dryrun] {ok} ok, {sk} skipped, {len(err)} errors / {len(results)} cells")
+    for r in err:
+        print(f"  ERROR {r['arch']}__{r['shape']}__{r['mesh']}: {r['error']}")
+    raise SystemExit(1 if err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Serving launcher: GQ-Fast analytics (the paper's workload) or LM decode.
+
+  PYTHONPATH=src python -m repro.launch.serve --workload analytics
+  PYTHONPATH=src python -m repro.launch.serve --workload lm
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--workload", choices=["analytics", "lm"], default="analytics")
+    ap.add_argument("--requests", type=int, default=60)
+    args = ap.parse_args()
+
+    if args.workload == "analytics":
+        import runpy
+        import sys
+
+        sys.argv = ["serve_analytics.py", "--requests", str(args.requests)]
+        runpy.run_path("examples/serve_analytics.py", run_name="__main__")
+        return
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs.registry import get_arch
+    from repro.models.transformer import decode_step, init_params, prefill
+
+    arch = get_arch("qwen2.5-3b")
+    cfg = arch.smoke_cfg
+    params = init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (4, 32), 0, cfg.vocab)
+    logits, cache, pos = prefill(params, toks, cfg, 128)
+    step = jax.jit(lambda p, c, t, i: decode_step(p, c, t, i, cfg))
+    cur = jnp.argmax(logits, -1).astype(jnp.int32)
+    t0 = time.perf_counter()
+    out = [cur]
+    for i in range(args.requests):
+        logits, cache = step(params, cache, cur, jnp.int32(32 + i))
+        cur = jnp.argmax(logits, -1).astype(jnp.int32)
+        out.append(cur)
+    jax.block_until_ready(cur)
+    dt = time.perf_counter() - t0
+    print(f"[serve/lm] {args.requests} decode steps × batch 4: "
+          f"{dt/args.requests*1e3:.1f} ms/step, {4*args.requests/dt:.1f} tok/s")
+    print("sample tokens:", np.asarray(jnp.stack(out))[:10, 0].tolist())
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,76 @@
+"""Training launcher: --arch <id> at smoke/CPU scale with the fault-tolerant
+loop, or --dry-run to lower the full config on the production mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --steps 50
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+
+    from repro.configs.registry import get_arch
+    from repro.optim.adamw import AdamWConfig
+    from repro.train.loop import TrainLoopConfig, train
+
+    arch = get_arch(args.arch)
+    loop_cfg = TrainLoopConfig(
+        total_steps=args.steps, ckpt_every=max(10, args.steps // 4),
+        ckpt_dir=f"{args.ckpt_dir}/{args.arch}",
+    )
+
+    if arch.kind == "lm":
+        from repro.data.lm_data import lm_batch
+        from repro.models.transformer import init_params, loss_fn
+
+        cfg = arch.smoke_cfg
+        params = init_params(cfg, jax.random.key(0))
+        params, res = train(
+            params, lambda p, b: loss_fn(p, b, cfg),
+            lambda s: lm_batch(s, 8, 64, cfg.vocab, seed=0),
+            loop_cfg, AdamWConfig(lr=1e-3), resume=args.resume,
+        )
+    elif arch.kind == "gnn":
+        from repro.data.graphs import make_molecule_batch
+        from repro.models.gnn.models import gnn_init, gnn_loss
+
+        cfg = arch.smoke_cfg
+        params = gnn_init(cfg, jax.random.key(0))
+        batches = [make_molecule_batch(8, 10, 24, seed=s).as_inputs() for s in range(4)]
+        params, res = train(
+            params, lambda p, b: gnn_loss(p, b, cfg, 8),
+            lambda s: batches[s % 4], loop_cfg, AdamWConfig(lr=1e-3),
+            resume=args.resume,
+        )
+    elif arch.kind == "recsys":
+        from repro.data.recsys import make_din_batch
+        from repro.models.din import din_init, din_loss
+
+        cfg = arch.smoke_cfg
+        params = din_init(cfg, jax.random.key(0))
+        params, res = train(
+            params, lambda p, b: din_loss(p, b, cfg),
+            lambda s: make_din_batch(64, seq_len=cfg.seq_len, n_items=cfg.n_items,
+                                     n_users=cfg.n_users, seed=s % 8),
+            loop_cfg, AdamWConfig(lr=1e-3), resume=args.resume,
+        )
+    else:
+        raise SystemExit(f"{args.arch} is a serving workload; use repro.launch.serve")
+
+    h = res.history
+    print(f"[train] {args.arch}: {len(h)} steps, "
+          f"loss {h[0]['loss']:.4f} → {h[-1]['loss']:.4f}"
+          f"{' (resumed from %d)' % res.resumed_from if res.resumed_from else ''}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,84 @@
+"""Shared model substrate: norms, RoPE, sharding hints, init, losses."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+def shard_hint(x: jnp.ndarray, *spec) -> jnp.ndarray:
+    """with_sharding_constraint that degrades to a no-op outside a mesh context
+    and silently drops axis names the current mesh doesn't have (so the same
+    model code runs in 1-device smoke tests, the 256-chip pod and the 512-chip
+    multi-pod mesh)."""
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        if mesh is None or not mesh.axis_names:
+            return x
+        names = set(mesh.axis_names)
+        sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+
+        def filt(s, dim):
+            if s is None:
+                return None
+            if isinstance(s, (tuple, list)):
+                kept = tuple(a for a in s if a in names)
+                if not kept:
+                    return None
+                n = 1
+                for a in kept:
+                    n *= sizes[a]
+                return kept if dim % n == 0 else None
+            if s not in names:
+                return None
+            return s if dim % sizes[s] == 0 else None
+
+        full = tuple(spec) + (None,) * (x.ndim - len(spec))
+        return jax.lax.with_sharding_constraint(
+            x, P(*(filt(s, d) for s, d in zip(full, x.shape)))
+        )
+    except Exception:
+        return x
+
+
+def rms_norm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(d_head: int, theta: float = 10000.0) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, d_head, 2, dtype=jnp.float32) / d_head))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """x: [..., S, H, hd]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [d/2]
+    ang = positions[..., None].astype(jnp.float32) * freqs  # [..., S, d/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dense_init(key, shape, in_axis: int = -2, dtype=jnp.float32) -> jnp.ndarray:
+    fan_in = shape[in_axis]
+    return (jax.random.normal(key, shape, jnp.float32) / jnp.sqrt(fan_in)).astype(dtype)
+
+
+def cross_entropy_loss(logits: jnp.ndarray, labels: jnp.ndarray,
+                       mask: jnp.ndarray | None = None) -> jnp.ndarray:
+    """Mean next-token CE; logits [..., V] fp32-softmaxed."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

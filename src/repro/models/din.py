@@ -1,0 +1,106 @@
+"""DIN — Deep Interest Network [arXiv:1706.06978].
+
+Target attention over the user behaviour sequence: for candidate item c and
+history h_1..h_T, attention MLP scores a(h_t, c) over [h, c, h−c, h⊙c]
+(the paper's activation unit, 80-40 MLP), weighted-sum pooled, concatenated
+with user/context features into the 200-80 output MLP.
+
+Shapes served: train_batch (65k), serve_p99 (512), serve_bulk (262k),
+retrieval_cand (1 user × 10⁶ candidates — batched dot scoring, no loop).
+Embedding lookups are the hot path: EmbeddingBag over sharded tables
+(DESIGN.md §5 — directly the paper's fragment lookup + γ).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from .common import shard_hint
+from .gnn.common import mlp_apply, mlp_init
+
+
+@dataclass(frozen=True)
+class DINConfig:
+    name: str = "din"
+    embed_dim: int = 18
+    seq_len: int = 100
+    attn_hidden: tuple[int, ...] = (80, 40)
+    mlp_hidden: tuple[int, ...] = (200, 80)
+    n_items: int = 10_000_000
+    n_users: int = 1_000_000
+    n_cates: int = 100_000
+
+    def param_count(self) -> int:
+        d = self.embed_dim
+        emb = (self.n_items + self.n_users + self.n_cates) * d
+        attn = 4 * d * 80 + 80 * 40 + 40 * 1 + 121
+        mlp = (4 * d) * 200 + 200 * 80 + 80 * 1 + 281
+        return emb + attn + mlp
+
+    def active_param_count(self) -> int:
+        """Params touched per example: MLPs + the (T+2) embedding rows gathered
+        (embedding tables are lookup-sparse — DESIGN.md roofline convention)."""
+        d = self.embed_dim
+        attn = 4 * d * 80 + 80 * 40 + 40 * 1 + 121
+        mlp = (4 * d) * 200 + 200 * 80 + 80 * 1 + 281
+        return attn * self.seq_len + mlp + (self.seq_len + 2) * d
+
+
+def din_init(cfg: DINConfig, key) -> dict:
+    ks = jax.random.split(key, 6)
+    d = cfg.embed_dim
+    return {
+        "item_emb": jax.random.normal(ks[0], (cfg.n_items, d), jnp.float32) * 0.01,
+        "cate_emb": jax.random.normal(ks[1], (cfg.n_cates, d), jnp.float32) * 0.01,
+        "user_emb": jax.random.normal(ks[2], (cfg.n_users, d), jnp.float32) * 0.01,
+        "attn": mlp_init(ks[3], [4 * d, *cfg.attn_hidden, 1]),
+        "mlp": mlp_init(ks[4], [4 * d, *cfg.mlp_hidden, 1]),
+    }
+
+
+def _target_attention(p, hist: jnp.ndarray, hist_mask: jnp.ndarray, cand: jnp.ndarray) -> jnp.ndarray:
+    """hist [B,T,D], cand [B,D] → pooled interest [B,D] (DIN activation unit)."""
+    B, T, D = hist.shape
+    c = jnp.broadcast_to(cand[:, None, :], (B, T, D))
+    feats = jnp.concatenate([hist, c, hist - c, hist * c], axis=-1)
+    logits = mlp_apply(p["attn"], feats, act=jax.nn.sigmoid)[..., 0]  # [B,T]
+    w = jnp.where(hist_mask > 0, logits, 0.0)  # paper: no softmax, masked weights
+    return jnp.einsum("bt,btd->bd", w, hist)
+
+
+def din_forward(p: dict, batch: dict, cfg: DINConfig) -> jnp.ndarray:
+    """batch: user [B], hist_items [B,T], hist_mask [B,T], cand_item [B] → logits [B]."""
+    hist = jnp.take(p["item_emb"], batch["hist_items"], axis=0)  # [B,T,D]
+    hist = shard_hint(hist, ("pod", "data"), None, None)
+    cand = jnp.take(p["item_emb"], batch["cand_item"], axis=0)  # [B,D]
+    user = jnp.take(p["user_emb"], batch["user"], axis=0)
+    interest = _target_attention(p, hist, batch["hist_mask"], cand)
+    x = jnp.concatenate([user, interest, cand, interest * cand], axis=-1)
+    return mlp_apply(p["mlp"], x, act=jax.nn.relu)[..., 0]
+
+
+def din_retrieval_scores(p: dict, batch: dict, cfg: DINConfig) -> jnp.ndarray:
+    """One user/history against n_candidates items: the pooled interest must be
+    re-computed per candidate (DIN's point), but batched — [N] scores with the
+    candidate dimension as the batch axis, no loop."""
+    hist = jnp.take(p["item_emb"], batch["hist_items"], axis=0)  # [1,T,D]
+    cands = jnp.take(p["item_emb"], batch["cand_items"], axis=0)  # [N,D]
+    N = cands.shape[0]
+    T, D = hist.shape[1], hist.shape[2]
+    hist_b = jnp.broadcast_to(hist, (N, T, D))
+    mask_b = jnp.broadcast_to(batch["hist_mask"], (N, T))
+    user = jnp.broadcast_to(jnp.take(p["user_emb"], batch["user"], axis=0), (N, D))
+    interest = _target_attention(p, hist_b, mask_b, cands)
+    x = jnp.concatenate([user, interest, cands, interest * cands], axis=-1)
+    return mlp_apply(p["mlp"], x, act=jax.nn.relu)[..., 0]
+
+
+def din_loss(p: dict, batch: dict, cfg: DINConfig):
+    logits = din_forward(p, batch, cfg)
+    y = batch["label"].astype(jnp.float32)
+    loss = jnp.mean(
+        jnp.maximum(logits, 0) - logits * y + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+    return loss, {"loss": loss}

@@ -1,0 +1,67 @@
+"""EmbeddingBag and model-parallel embedding tables.
+
+JAX has no native EmbeddingBag or CSR sparse — per the assignment this IS part
+of the system: built from ``jnp.take`` + ``jax.ops.segment_sum`` (exactly a
+GQ-Fast fragment lookup + γ hop, DESIGN.md §5).
+
+The sharded lookup row-mod-shards the table over the ``model`` axis and
+exchanges only batch×dim activations (psum), never gathering the table.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import shard_hint
+
+
+def embedding_bag(
+    table: jnp.ndarray,  # [V, D]
+    ids: jnp.ndarray,  # [n_ids] flat ids of all bags
+    bag_ids: jnp.ndarray,  # [n_ids] which bag each id belongs to
+    n_bags: int,
+    weights: jnp.ndarray | None = None,  # per-id weights
+    mode: str = "sum",
+) -> jnp.ndarray:
+    """Ragged multi-hot lookup-and-reduce (torch ``nn.EmbeddingBag`` semantics,
+    CSR-style (ids, bag offsets→bag_ids) layout)."""
+    vecs = jnp.take(table, ids, axis=0)  # [n_ids, D]
+    if weights is not None:
+        vecs = vecs * weights[:, None]
+    out = jax.ops.segment_sum(vecs, bag_ids, num_segments=n_bags)
+    if mode == "mean":
+        cnt = jax.ops.segment_sum(jnp.ones_like(ids, jnp.float32), bag_ids, n_bags)
+        out = out / jnp.maximum(cnt, 1.0)[:, None]
+    elif mode == "max":
+        out = jax.ops.segment_max(vecs, bag_ids, num_segments=n_bags)
+    return out
+
+
+def sharded_embedding_lookup(
+    table: jnp.ndarray,  # [V, D] — row-mod-sharded over 'model' when meshed
+    ids: jnp.ndarray,  # [...] int32
+    n_shards: int,
+    axis_name: str = "model",
+) -> jnp.ndarray:
+    """Lookup for a table partitioned row-mod over ``axis_name`` inside
+    shard_map: shard r owns rows {v : v % n_shards == r}; every shard looks up
+    its local rows for the full id batch (masked) and a psum combines — the
+    collective moves batch×D, not the table."""
+    r = jax.lax.axis_index(axis_name)
+    local = jnp.take(table, ids // n_shards, axis=0)
+    mask = (ids % n_shards == r).astype(table.dtype)
+    return jax.lax.psum(local * mask[..., None], axis_name)
+
+
+def mod_shard_table(table, n_shards: int):
+    """Host-side: reorder a [V, D] table into the row-mod layout expected by
+    :func:`sharded_embedding_lookup` ([n_shards · ceil(V/n) rows])."""
+    import numpy as np
+
+    V, D = table.shape
+    rows_per = -(-V // n_shards)
+    out = np.zeros((n_shards * rows_per, D), table.dtype)
+    for rshard in range(n_shards):
+        rows = np.arange(rshard, V, n_shards)
+        out[rshard * rows_per : rshard * rows_per + rows.shape[0]] = table[rows]
+    return out.reshape(n_shards, rows_per, D)

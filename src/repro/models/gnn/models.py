@@ -1,0 +1,402 @@
+"""The four assigned GNN architectures, one functional (init, apply) pair each.
+
+  schnet        [arXiv:1706.08566]  cfconv: RBF-filter ⊙ gather → segment_sum
+  egnn          [arXiv:2102.09844]  E(n): scalar-distance MLP msgs + coord update
+  mace          [arXiv:2206.07697]  E(3)-ACE: SH ⊗ radial A-basis, correlation-3
+                                    symmetric CG contractions (real basis)
+  equiformer_v2 [arXiv:2306.12059]  eSCN: per-edge Wigner rotation to edge frame,
+                                    SO(2) m-restricted linear conv, graph attention
+
+All share the GraphBatch contract; `apply` returns node embeddings [N, d_hidden];
+`head` maps them to node logits (classification shapes) or per-graph energy
+(molecule shape). See DESIGN.md §5 for documented simplifications.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (
+    aggregate,
+    edge_hint,
+    node_hint,
+    bessel_rbf,
+    cosine_cutoff,
+    edge_vectors,
+    gaussian_rbf,
+    mlp_apply,
+    mlp_init,
+    readout,
+)
+from .equivariant import (
+    irreps_dim,
+    l_slices,
+    real_cg,
+    real_sph_harm,
+    rotation_to_edge_frame,
+    wigner_d_real,
+)
+
+N_SPECIES = 100
+
+
+REMAT = True  # toggled by the 'naive' dry-run variant (§Perf before/after)
+
+
+def _ckpt(fn):
+    """Per-block remat: per-edge intermediates are recomputed in backward —
+    without it the 12-layer equiformer saves every [E, C, irreps] tensor."""
+    if not REMAT:
+        return fn
+    return jax.checkpoint(fn, policy=jax.checkpoint_policies.nothing_saveable)
+
+
+
+@dataclass(frozen=True)
+class GNNConfig:
+    name: str
+    arch: str  # schnet | egnn | mace | equiformer_v2
+    n_layers: int
+    d_hidden: int
+    n_rbf: int = 16
+    cutoff: float = 10.0
+    l_max: int = 0
+    m_max: int = 0
+    n_heads: int = 1
+    correlation: int = 1
+    d_feat: int = 0  # input node-feature width (0 → atom-type embedding only)
+    n_classes: int = 0  # 0 → energy head
+
+
+# ---------------------------------------------------------------------------
+# SchNet
+# ---------------------------------------------------------------------------
+
+
+def schnet_init(cfg: GNNConfig, key) -> dict:
+    ks = jax.random.split(key, 3 + cfg.n_layers * 3)
+    d = cfg.d_hidden
+    p = {"embed": jax.random.normal(ks[0], (N_SPECIES, d)) * 0.1, "blocks": []}
+    if cfg.d_feat:
+        p["feat_proj"] = mlp_init(ks[1], [cfg.d_feat, d])
+    for i in range(cfg.n_layers):
+        p["blocks"].append({
+            "filter": mlp_init(ks[2 + 3 * i], [cfg.n_rbf, d, d]),
+            "in": mlp_init(ks[3 + 3 * i], [d, d]),
+            "out": mlp_init(ks[4 + 3 * i], [d, d, d]),
+        })
+    return p
+
+
+def _ssp(x):  # shifted softplus (SchNet activation)
+    return jax.nn.softplus(x) - math.log(2.0)
+
+
+def schnet_apply(p: dict, batch: dict, cfg: GNNConfig) -> jnp.ndarray:
+    n = batch["z"].shape[0]
+    x = jnp.take(p["embed"], batch["z"], axis=0)
+    if cfg.d_feat and "node_feat" in batch:
+        x = x + mlp_apply(p["feat_proj"], batch["node_feat"])
+    _, r = edge_vectors(batch["pos"], batch["edge_src"], batch["edge_dst"])
+    rbf = gaussian_rbf(r, cfg.n_rbf, cfg.cutoff) * batch["edge_mask"][:, None]
+    for blk in p["blocks"]:
+        def block(x, blk=blk):
+            W = mlp_apply(blk["filter"], rbf, act=_ssp, final_act=True)
+            h = mlp_apply(blk["in"], x)
+            msg = edge_hint(jnp.take(h, batch["edge_src"], axis=0)) * W
+            agg = aggregate(msg, batch["edge_dst"], n)
+            return node_hint(x + mlp_apply(blk["out"], agg, act=_ssp))
+        x = _ckpt(block)(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# EGNN
+# ---------------------------------------------------------------------------
+
+
+def egnn_init(cfg: GNNConfig, key) -> dict:
+    ks = jax.random.split(key, 3 + cfg.n_layers * 3)
+    d = cfg.d_hidden
+    p = {"embed": jax.random.normal(ks[0], (N_SPECIES, d)) * 0.1, "blocks": []}
+    if cfg.d_feat:
+        p["feat_proj"] = mlp_init(ks[1], [cfg.d_feat, d])
+    for i in range(cfg.n_layers):
+        p["blocks"].append({
+            "phi_e": mlp_init(ks[2 + 3 * i], [2 * d + 1, d, d]),
+            "phi_x": mlp_init(ks[3 + 3 * i], [d, d, 1]),
+            "phi_h": mlp_init(ks[4 + 3 * i], [2 * d, d, d]),
+        })
+    return p
+
+
+def egnn_apply(p: dict, batch: dict, cfg: GNNConfig) -> jnp.ndarray:
+    n = batch["z"].shape[0]
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    h = jnp.take(p["embed"], batch["z"], axis=0)
+    if cfg.d_feat and "node_feat" in batch:
+        h = h + mlp_apply(p["feat_proj"], batch["node_feat"])
+    x = batch["pos"]
+    em = batch["edge_mask"][:, None]
+    for blk in p["blocks"]:
+        def block(xh, blk=blk):
+            x, h = xh
+            vec = edge_hint(jnp.take(x, src, axis=0) - jnp.take(x, dst, axis=0))
+            d2 = jnp.sum(vec**2, axis=-1, keepdims=True)
+            hi = edge_hint(jnp.take(h, dst, axis=0))
+            hj = edge_hint(jnp.take(h, src, axis=0))
+            m = mlp_apply(blk["phi_e"], jnp.concatenate([hi, hj, d2], -1), final_act=True) * em
+            # coordinate update (normalized difference, EGNN eq. 4)
+            coef = mlp_apply(blk["phi_x"], m) * em
+            xup = aggregate(vec / (jnp.sqrt(d2) + 1.0) * coef, dst, n)
+            magg = aggregate(m, dst, n)
+            return (x + xup, node_hint(h + mlp_apply(blk["phi_h"], jnp.concatenate([h, magg], -1))))
+        x, h = _ckpt(block)((x, h))
+    return h
+
+
+# ---------------------------------------------------------------------------
+# MACE (E(3)-ACE, correlation order 3, channel-wise real-CG contractions)
+# ---------------------------------------------------------------------------
+
+
+def _mace_paths(l_max: int) -> list[tuple[int, int, int]]:
+    return [
+        (l1, l2, l3)
+        for l1 in range(l_max + 1)
+        for l2 in range(l_max + 1)
+        for l3 in range(l_max + 1)
+        if abs(l1 - l2) <= l3 <= l1 + l2
+    ]
+
+
+def mace_init(cfg: GNNConfig, key) -> dict:
+    C, dim = cfg.d_hidden, irreps_dim(cfg.l_max)
+    paths2 = _mace_paths(cfg.l_max)
+    ks = jax.random.split(key, 6 + cfg.n_layers * (4 + len(paths2)))
+    p: dict = {"embed": jax.random.normal(ks[0], (N_SPECIES, C)) * 0.1, "blocks": []}
+    if cfg.d_feat:
+        p["feat_proj"] = mlp_init(ks[1], [cfg.d_feat, C])
+    ki = 2
+    for _ in range(cfg.n_layers):
+        blk = {
+            # radial MLP: one weight per (channel, l1, l2) A-path
+            "radial": mlp_init(ks[ki], [cfg.n_rbf, 64, C * len(paths2)]),
+            "w_A": jax.random.normal(ks[ki + 1], (len(paths2), C)) / math.sqrt(len(paths2)),
+            "w_B2": jax.random.normal(ks[ki + 2], (len(paths2), C)) / math.sqrt(len(paths2)),
+            "w_B3": jax.random.normal(ks[ki + 3], (len(paths2), C)) / math.sqrt(len(paths2)),
+            "lin": jax.random.normal(ks[ki + 4], (C, C)) / math.sqrt(C),
+        }
+        p["blocks"].append(blk)
+        ki += 5
+    return p
+
+
+def _couple(x: jnp.ndarray, y: jnp.ndarray, l1: int, l2: int, l3: int,
+            sl: list[slice]) -> jnp.ndarray:
+    Cmat = jnp.asarray(real_cg(l1, l2, l3), x.dtype)
+    return jnp.einsum("ncm,ncp,mpq->ncq", x[..., sl[l1]], y[..., sl[l2]], Cmat)
+
+
+def mace_apply(p: dict, batch: dict, cfg: GNNConfig) -> jnp.ndarray:
+    n = batch["z"].shape[0]
+    C, lm = cfg.d_hidden, cfg.l_max
+    dim = irreps_dim(lm)
+    sl = l_slices(lm)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    vec, r = edge_vectors(batch["pos"], src, dst)
+    Y = edge_hint(real_sph_harm(lm, vec))  # [E, dim]
+    rbf = bessel_rbf(r, cfg.n_rbf, cfg.cutoff)
+    env = (cosine_cutoff(r, cfg.cutoff) * batch["edge_mask"])[:, None]
+    paths = _mace_paths(lm)
+
+    h0 = jnp.take(p["embed"], batch["z"], axis=0)
+    if cfg.d_feat and "node_feat" in batch:
+        h0 = h0 + mlp_apply(p["feat_proj"], batch["node_feat"])
+    # node irreps: scalar channel initialized from embedding
+    h = node_hint(jnp.zeros((n, C, dim)).at[:, :, 0].set(h0))
+
+    for blk in p["blocks"]:
+      def block(h, blk=blk):
+        Rw = mlp_apply(blk["radial"], rbf).reshape(-1, C, len(paths)) * env[..., None]
+        Rw = edge_hint(Rw)
+        hj = edge_hint(jnp.take(h, src, axis=0))  # [E, C, dim]
+        # A-basis: Σ_j R ⊙ (Y_{l1} ⊗ h_{l2})_{l3}
+        A = jnp.zeros((n, C, dim))
+        for pi, (l1, l2, l3) in enumerate(paths):
+            Cm = jnp.asarray(real_cg(l1, l2, l3), h.dtype)
+            msg = jnp.einsum("em,ecp,mpq->ecq", Y[:, sl[l1]], hj[..., sl[l2]], Cm)
+            msg = msg * Rw[:, :, pi : pi + 1]
+            A = A.at[..., sl[l3]].add(aggregate(msg, dst, n))
+        # B-basis: symmetric contractions, correlation order 1..3
+        B = A * blk["w_A"][0][None, :, None]  # ν = 1 (per-channel scale)
+        AA = jnp.zeros_like(A)
+        for pi, (l1, l2, l3) in enumerate(paths):  # ν = 2
+            AA = AA.at[..., sl[l3]].add(
+                _couple(A, A, l1, l2, l3, sl) * blk["w_B2"][pi][None, :, None]
+            )
+        B = B + AA
+        AAA = jnp.zeros_like(A)
+        for pi, (l1, l2, l3) in enumerate(paths):  # ν = 3: (A⊗A)_{l1} ⊗ A_{l2} → l3
+            AAA = AAA.at[..., sl[l3]].add(
+                _couple(AA, A, l1, l2, l3, sl) * blk["w_B3"][pi][None, :, None]
+            )
+        B = B + AAA
+        # channel-mixing update + residual (reduce-scatter back to C-sharded)
+        return node_hint(h + jnp.einsum("ncq,cd->ndq", B, blk["lin"]) / len(paths))
+      h = _ckpt(block)(h)
+    return h[:, :, 0]  # scalar (invariant) channels
+
+
+# ---------------------------------------------------------------------------
+# EquiformerV2 (eSCN SO(2) convolution + graph attention)
+# ---------------------------------------------------------------------------
+
+
+def _m_restricted_dim(l_max: int, m_max: int) -> int:
+    return sum(min(2 * l + 1, 2 * m_max + 1) for l in range(l_max + 1))
+
+
+def equiformer_init(cfg: GNNConfig, key) -> dict:
+    C, lm, mm = cfg.d_hidden, cfg.l_max, cfg.m_max
+    ks = jax.random.split(key, 4 + cfg.n_layers * 6)
+    n_l = lm + 1
+    p: dict = {"embed": jax.random.normal(ks[0], (N_SPECIES, C)) * 0.1, "blocks": []}
+    if cfg.d_feat:
+        p["feat_proj"] = mlp_init(ks[1], [cfg.d_feat, C])
+    for i in range(cfg.n_layers):
+        k = ks[3 + 6 * i : 9 + 6 * i]
+        blk = {
+            # SO(2) conv: m=0 real matrix over (l, channel); m>0 complex pair
+            "w_m0": jax.random.normal(k[0], (n_l, C, C)) / math.sqrt(C * n_l),
+            "w_re": jax.random.normal(k[1], (mm, n_l, C, C)) / math.sqrt(C * n_l),
+            "w_im": jax.random.normal(k[2], (mm, n_l, C, C)) / math.sqrt(C * n_l),
+            "radial": mlp_init(k[3], [cfg.n_rbf, 64, C]),
+            "attn": mlp_init(k[4], [2 * C, C, cfg.n_heads]),
+            "ffn": mlp_init(k[5], [C, 2 * C, C]),
+        }
+        p["blocks"].append(blk)
+    return p
+
+
+def equiformer_apply(p: dict, batch: dict, cfg: GNNConfig) -> jnp.ndarray:
+    n = batch["z"].shape[0]
+    C, lm, mm, H = cfg.d_hidden, cfg.l_max, cfg.m_max, cfg.n_heads
+    dim = irreps_dim(lm)
+    sl = l_slices(lm)
+    src, dst = batch["edge_src"], batch["edge_dst"]
+    vec, r = edge_vectors(batch["pos"], src, dst)
+    rot = edge_hint(rotation_to_edge_frame(vec))  # [E,3,3]
+    D = [edge_hint(d) for d in wigner_d_real(lm, rot)]  # per-l [E, 2l+1, 2l+1]
+    Dt = [jnp.swapaxes(d, -1, -2) for d in D]
+    rbf = edge_hint(gaussian_rbf(r, cfg.n_rbf, cfg.cutoff))
+    env = (cosine_cutoff(r, cfg.cutoff) * batch["edge_mask"])[:, None]
+
+    h0 = jnp.take(p["embed"], batch["z"], axis=0)
+    if cfg.d_feat and "node_feat" in batch:
+        h0 = h0 + mlp_apply(p["feat_proj"], batch["node_feat"])
+    h = node_hint(jnp.zeros((n, C, dim)).at[:, :, 0].set(h0))
+
+    for blk in p["blocks"]:
+      def block(h, blk=blk):
+        hj = edge_hint(jnp.take(h, src, axis=0))  # [E, C, dim]
+        # rotate into edge frame, keep only |m| <= m_max coefficients (eSCN)
+        rstack = []
+        for l in range(lm + 1):
+            xr = jnp.einsum("emk,eck->ecm", D[l], hj[..., sl[l]])  # rotated
+            lo = max(0, l - mm)
+            hi = min(2 * l, l + mm)
+            rstack.append(xr[..., lo : hi + 1])  # m ∈ [-min(l,mm), min(l,mm)]
+        # SO(2) linear conv: mixes channels and l at fixed m
+        rad = mlp_apply(blk["radial"], rbf) * env  # [E, C] radial gate
+        out_l: list[jnp.ndarray] = []
+        for l in range(lm + 1):
+            ml = min(l, mm)
+            acc = jnp.zeros((hj.shape[0], C, 2 * l + 1))
+            for lp in range(lm + 1):
+                mlp_ = min(lp, mm)
+                x = rstack[lp]  # [E, C, 2*mlp_+1]
+                mshare = min(ml, mlp_)
+                # m = 0 component
+                y0 = jnp.einsum("ec,cd->ed", x[..., mlp_], blk["w_m0"][lp])
+                acc = acc.at[..., l].add(y0)
+                # m > 0: complex-structured 2×2 mixing of (cos, sin) parts
+                for m in range(1, mshare + 1):
+                    xc = x[..., mlp_ + m]  # cos part (m>0 real SH)
+                    xs = x[..., mlp_ - m]  # sin part
+                    wre, wim = blk["w_re"][m - 1, lp], blk["w_im"][m - 1, lp]
+                    yc = jnp.einsum("ec,cd->ed", xc, wre) - jnp.einsum("ec,cd->ed", xs, wim)
+                    ys = jnp.einsum("ec,cd->ed", xs, wre) + jnp.einsum("ec,cd->ed", xc, wim)
+                    acc = acc.at[..., l + m].add(yc)
+                    acc = acc.at[..., l - m].add(ys)
+            out_l.append(acc * rad[..., None])
+        # attention weights from invariant (l=0) features
+        inv_i = jnp.take(h[:, :, 0], dst, axis=0)
+        inv_msg = out_l[0][..., 0]
+        logits = mlp_apply(blk["attn"], jnp.concatenate([inv_i, inv_msg], -1))  # [E, H]
+        logits = logits - jax.ops.segment_max(logits, dst, num_segments=n)[dst]
+        expw = jnp.exp(logits) * batch["edge_mask"][:, None]
+        denom = aggregate(expw, dst, n)[dst] + 1e-9
+        alpha = (expw / denom)  # [E, H] segment softmax
+        ch_per_head = C // H
+        alpha_c = jnp.repeat(alpha, ch_per_head, axis=1)  # [E, C]
+        # rotate back and aggregate
+        msg = jnp.zeros((hj.shape[0], C, dim))
+        for l in range(lm + 1):
+            msg = msg.at[..., sl[l]].set(
+                jnp.einsum("emk,ecm->eck", Dt[l], out_l[l])
+            )
+        msg = msg * alpha_c[..., None]
+        agg = aggregate(msg.reshape(msg.shape[0], -1), dst, n).reshape(n, C, dim)
+        h = h + agg
+        # gated FFN on invariant channel, scaling all irreps (equivariant gate)
+        gate = mlp_apply(blk["ffn"], h[:, :, 0])
+        h = h * jax.nn.sigmoid(gate)[..., None]
+        return node_hint(h.at[:, :, 0].add(gate))
+      h = _ckpt(block)(h)
+    return h[:, :, 0]
+
+
+# ---------------------------------------------------------------------------
+# Dispatch table + heads
+# ---------------------------------------------------------------------------
+
+GNN_MODELS = {
+    "schnet": (schnet_init, schnet_apply),
+    "egnn": (egnn_init, egnn_apply),
+    "mace": (mace_init, mace_apply),
+    "equiformer_v2": (equiformer_init, equiformer_apply),
+}
+
+
+def gnn_init(cfg: GNNConfig, key) -> dict:
+    init, _ = GNN_MODELS[cfg.arch]
+    ks = jax.random.split(key, 2)
+    p = {"backbone": init(cfg, ks[0])}
+    out = cfg.n_classes if cfg.n_classes else 1
+    p["head"] = mlp_init(ks[1], [cfg.d_hidden, cfg.d_hidden, out])
+    return p
+
+
+def gnn_apply(p: dict, batch: dict, cfg: GNNConfig, n_graphs: int = 1) -> jnp.ndarray:
+    _, apply = GNN_MODELS[cfg.arch]
+    x = apply(p["backbone"], batch, cfg)
+    out = mlp_apply(p["head"], x)
+    if cfg.n_classes:
+        return out  # [N, n_classes] node logits
+    return readout(out, batch, n_graphs)[:, 0]  # [n_graphs] energies
+
+
+def gnn_loss(p: dict, batch: dict, cfg: GNNConfig, n_graphs: int = 1):
+    out = gnn_apply(p, batch, cfg, n_graphs)
+    if cfg.n_classes:
+        logp = jax.nn.log_softmax(out, axis=-1)
+        nll = -jnp.take_along_axis(logp, batch["labels"][:, None], axis=1)[:, 0]
+        loss = (nll * batch["node_mask"]).sum() / jnp.maximum(batch["node_mask"].sum(), 1)
+    else:
+        loss = jnp.mean((out - batch["labels"]) ** 2)
+    return loss, {"loss": loss}

@@ -1,0 +1,404 @@
+"""Decoder-only LM family: dense (CodeQwen/Qwen2.5/Llama-3) and MoE
+(Arctic-style dense+MoE parallel residual, OLMoE top-k) in one config space.
+
+Production posture:
+  * scan-over-layers with stacked weights (+ optional remat) — small HLO, fast
+    compiles at 512 devices, per-layer grain for XLA collective overlap;
+  * chunked online-softmax attention (flash-style in pure JAX) bounds activation
+    memory for 32k prefill;
+  * GQA without materializing repeated KV heads;
+  * MoE dispatch is scatter-based (positions from a cumsum over the token→expert
+    one-hot [T,E]) — never materializes a [T,E,C] mask. The dispatch itself is a
+    relationship-query γ over token→expert edges (DESIGN.md §5);
+  * every major activation carries a ``shard_hint`` so the same code lowers on
+    1 device and on the (pod, data, model) production meshes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from dataclasses import dataclass
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .common import apply_rope, cross_entropy_loss, dense_init, rms_norm, shard_hint
+
+BATCH = ("pod", "data")  # logical batch sharding axes
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff_expert: int
+    dense_residual: bool = False  # Arctic: dense FFN in parallel with MoE
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+@dataclass(frozen=True)
+class TransformerConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    d_head: int = 128
+    qkv_bias: bool = False
+    moe: MoEConfig | None = None
+    rope_theta: float = 500000.0
+    norm_eps: float = 1e-5
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    remat: bool = True
+    attn_q_chunk: int = 2048
+    attn_kv_chunk: int = 2048
+    tie_embeddings: bool = False
+    seq_shard: bool = False  # sequence-parallel residual stream (Megatron-SP)
+
+    def pad_heads(self, tp: int) -> "TransformerConfig":
+        """Pad q-head count up to a multiple of tp (production TP divisibility;
+        padded heads have zero-init output rows — a no-op at init)."""
+        h = -(-self.n_heads // tp) * tp
+        return dataclasses.replace(self, n_heads=h) if h != self.n_heads else self
+
+    @property
+    def n_rep(self) -> int:
+        return self.n_heads // self.n_kv_heads if self.n_heads % self.n_kv_heads == 0 else 0
+
+    def param_count(self) -> int:
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = 3 * d * f if self.moe is None or self.moe.dense_residual else 0
+        if self.moe is not None:
+            ffn += self.moe.n_experts * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ffn + 2 * d) + emb + d
+
+    def active_param_count(self) -> int:
+        """Per-token active params (MoE: top_k experts only)."""
+        d, f, L, V = self.d_model, self.d_ff, self.n_layers, self.vocab
+        attn = d * self.d_head * (self.n_heads * 2 + self.n_kv_heads * 2)
+        ffn = 3 * d * f if self.moe is None or self.moe.dense_residual else 0
+        if self.moe is not None:
+            ffn += self.moe.top_k * 3 * d * self.moe.d_ff_expert + d * self.moe.n_experts
+        emb = V * d * (1 if self.tie_embeddings else 2)
+        return L * (attn + ffn + 2 * d) + emb + d
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: TransformerConfig, key: jax.Array) -> dict:
+    L, d, hd = cfg.n_layers, cfg.d_model, cfg.d_head
+    H, Hkv, f = cfg.n_heads, cfg.n_kv_heads, cfg.d_ff
+    ks = jax.random.split(key, 16)
+    pt = cfg.param_dtype
+
+    def di(k, shape, in_axis=-2):
+        return dense_init(k, shape, in_axis, pt)
+
+    layer = {
+        "ln1": jnp.ones((L, d), pt),
+        "ln2": jnp.ones((L, d), pt),
+        "wq": di(ks[0], (L, d, H, hd), -3),
+        "wk": di(ks[1], (L, d, Hkv, hd), -3),
+        "wv": di(ks[2], (L, d, Hkv, hd), -3),
+        "wo": di(ks[3], (L, H, hd, d), -2),
+    }
+    if cfg.qkv_bias:
+        layer["bq"] = jnp.zeros((L, H, hd), pt)
+        layer["bk"] = jnp.zeros((L, Hkv, hd), pt)
+        layer["bv"] = jnp.zeros((L, Hkv, hd), pt)
+    if cfg.moe is None or cfg.moe.dense_residual:
+        layer["w_gate"] = di(ks[4], (L, d, f))
+        layer["w_up"] = di(ks[5], (L, d, f))
+        layer["w_down"] = di(ks[6], (L, f, d))
+    if cfg.moe is not None:
+        m = cfg.moe
+        layer["router"] = di(ks[7], (L, d, m.n_experts))
+        layer["e_gate"] = di(ks[8], (L, m.n_experts, d, m.d_ff_expert))
+        layer["e_up"] = di(ks[9], (L, m.n_experts, d, m.d_ff_expert))
+        layer["e_down"] = di(ks[10], (L, m.n_experts, m.d_ff_expert, d))
+    params = {
+        "embed": di(ks[11], (cfg.vocab, d), -1),
+        "layers": layer,
+        "ln_f": jnp.ones((d,), pt),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = di(ks[12], (d, cfg.vocab))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+
+def _gqa_scores(q: jnp.ndarray, k: jnp.ndarray) -> jnp.ndarray:
+    """q [B,Sq,H,hd] × k [B,Sk,Hkv,hd] → [B,Hkv,G,Sq,Sk] without repeating K."""
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    G = H // Hkv
+    qg = q.reshape(B, Sq, Hkv, G, hd)
+    return jnp.einsum("bsKgh,btKh->bKgst", qg, k) / jnp.sqrt(hd).astype(q.dtype)
+
+
+def chunked_attention(
+    q: jnp.ndarray,  # [B,Sq,H,hd]
+    k: jnp.ndarray,  # [B,Sk,Hkv,hd]
+    v: jnp.ndarray,
+    causal: bool,
+    q_offset: jnp.ndarray | int = 0,  # absolute position of q[0] (decode/prefill)
+    kv_valid: jnp.ndarray | int | None = None,  # number of valid kv positions
+    kv_chunk: int = 2048,
+) -> jnp.ndarray:
+    """Online-softmax attention over KV chunks (flash-style, pure JAX): memory
+    O(Sq · kv_chunk) instead of O(Sq · Sk)."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = H // Hkv
+    kv_chunk = min(kv_chunk, Sk)
+    n_chunks = -(-Sk // kv_chunk)
+    pad = n_chunks * kv_chunk - Sk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, n_chunks, kv_chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, n_chunks, kv_chunk, Hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    q_pos = jnp.asarray(q_offset) + jnp.arange(Sq)
+
+    def step(carry, chunk):
+        m, l, acc, ci = carry
+        kch, vch = chunk
+        s = _gqa_scores(q, kch).astype(jnp.float32)  # [B,Hkv,G,Sq,C]
+        kv_pos = ci * kv_chunk + jnp.arange(kv_chunk)
+        mask = jnp.ones((Sq, kv_chunk), bool)
+        if causal:
+            mask &= q_pos[:, None] >= kv_pos[None, :]
+        if kv_valid is not None:
+            mask &= kv_pos[None, :] < jnp.asarray(kv_valid)
+        mask &= kv_pos[None, :] < Sk  # chunk padding
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        pv = jnp.einsum("bKgsc,bcKh->bKgsh", p.astype(q.dtype), vch).astype(jnp.float32)
+        acc_new = acc * alpha[..., None] + pv
+        return (m_new, l_new, acc_new, ci + 1), None
+
+    m0 = jnp.full((B, Hkv, G, Sq), -jnp.inf, jnp.float32)
+    l0 = jnp.zeros((B, Hkv, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
+    (m, l, acc, _), _ = jax.lax.scan(step, (m0, l0, a0, 0), (kc, vc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MoE
+# ---------------------------------------------------------------------------
+
+
+def moe_ffn(lp: dict, x: jnp.ndarray, cfg: TransformerConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: [T, d] flattened tokens → (y [T, d], aux_loss scalar)."""
+    m = cfg.moe
+    T, d = x.shape
+    E, K = m.n_experts, m.top_k
+    logits = (x.astype(jnp.float32) @ lp["router"].astype(jnp.float32))  # [T,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, topi = jax.lax.top_k(probs, K)  # [T,K]
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # Switch-style load-balance auxiliary loss
+    me = probs.mean(0)
+    ce = jnp.zeros(E).at[topi.reshape(-1)].add(1.0) / (T * K)
+    aux = m.router_aux_weight * E * jnp.sum(me * ce)
+
+    C = max(8, int(-(-T * K * m.capacity_factor // E)))  # capacity per expert
+    flat_e = topi.reshape(-1)  # [T*K]
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)  # [T*K,E]
+    pos = (jnp.cumsum(onehot, axis=0) - onehot)  # positions before this entry
+    pos_flat = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]  # [T*K]
+    keep = pos_flat < C
+    slot = jnp.where(keep, pos_flat, C)  # dropped tokens → overflow slot C
+
+    xk = shard_hint(jnp.repeat(x, K, axis=0), BATCH, None)  # per-(t,k) tokens
+    zbuf = shard_hint(jnp.zeros((E, C + 1, d), x.dtype), "model", None, None)
+    buf = zbuf.at[flat_e, slot].set(xk)
+    buf = shard_hint(buf[:, :C], "model", None, None)  # [E,C,d]
+
+    # compute follows the weight sharding: E on 'model', ffn width on 'data' —
+    # gate/up are local; down contracts the sharded width (psum over 'data')
+    g = jnp.einsum("ecd,edf->ecf", buf, lp["e_gate"].astype(x.dtype))
+    u = jnp.einsum("ecd,edf->ecf", buf, lp["e_up"].astype(x.dtype))
+    h = shard_hint(jax.nn.silu(g) * u, "model", None, "data")
+    y_e = jnp.einsum("ecf,efd->ecd", h, lp["e_down"].astype(x.dtype))
+    y_e = shard_hint(y_e, "model", None, None)
+    y_e = jnp.concatenate([y_e, jnp.zeros((E, 1, d), x.dtype)], axis=1)  # overflow→0
+
+    gathered = shard_hint(y_e[flat_e, slot], BATCH, None)  # [T*K, d]
+    wts = (topw.reshape(-1) * keep).astype(x.dtype)
+    y = (gathered * wts[:, None]).reshape(T, K, d).sum(axis=1)
+    return y, aux
+
+
+# ---------------------------------------------------------------------------
+# Blocks / forward
+# ---------------------------------------------------------------------------
+
+
+def _attn(lp, x, cfg: TransformerConfig, positions, kv_cache=None, kv_valid=None):
+    B, S, d = x.shape
+    cd = cfg.compute_dtype
+    xn = rms_norm(x, lp["ln1"], cfg.norm_eps).astype(cd)
+    q = jnp.einsum("bsd,dhk->bshk", xn, lp["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhk->bshk", xn, lp["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhk->bshk", xn, lp["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + lp["bq"].astype(cd)
+        k = k + lp["bk"].astype(cd)
+        v = v + lp["bv"].astype(cd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    q = shard_hint(q, BATCH, None, "model", None)
+    k = shard_hint(k, BATCH, None, None, None)
+
+    if kv_cache is not None:
+        ck, cv, pos0 = kv_cache  # [B,Smax,Hkv,hd] ×2, scalar write offset
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, pos0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, pos0, 0, 0))
+        attn_out = chunked_attention(
+            q, ck, cv, causal=True, q_offset=pos0,
+            kv_valid=kv_valid, kv_chunk=cfg.attn_kv_chunk,
+        )
+        new_cache = (ck, cv)
+    else:
+        attn_out = chunked_attention(q, k, v, causal=True, kv_chunk=cfg.attn_kv_chunk)
+        new_cache = (k, v)
+    out = jnp.einsum("bshk,hkd->bsd", attn_out, lp["wo"].astype(cd))
+    return shard_hint(out, BATCH, None, None), new_cache
+
+
+def _ffn(lp, x, cfg: TransformerConfig):
+    cd = cfg.compute_dtype
+    xn = rms_norm(x, lp["ln2"], cfg.norm_eps).astype(cd)
+    B, S, d = xn.shape
+    aux = jnp.float32(0)
+    y = jnp.zeros_like(xn)
+    if cfg.moe is None or cfg.moe.dense_residual:
+        g = jnp.einsum("bsd,df->bsf", xn, lp["w_gate"].astype(cd))
+        u = jnp.einsum("bsd,df->bsf", xn, lp["w_up"].astype(cd))
+        h = jax.nn.silu(g) * u
+        h = shard_hint(h, BATCH, None, "model")
+        y = y + jnp.einsum("bsf,fd->bsd", h, lp["w_down"].astype(cd))
+    if cfg.moe is not None:
+        ym, aux = moe_ffn(lp, xn.reshape(B * S, d), cfg)
+        y = y + ym.reshape(B, S, d)
+    return shard_hint(y, BATCH, None, None), aux
+
+
+def _layer(cfg: TransformerConfig, x, lp, positions, kv_cache=None, kv_valid=None):
+    a, cache = _attn(lp, x, cfg, positions, kv_cache, kv_valid)
+    x = x + a.astype(x.dtype)
+    f, aux = _ffn(lp, x, cfg)
+    x = x + f.astype(x.dtype)
+    return x, cache, aux
+
+
+def forward(params: dict, tokens: jnp.ndarray, cfg: TransformerConfig) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/prefill forward (no cache); returns (logits, moe_aux)."""
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    seq_ax = "model" if cfg.seq_shard else None
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    x = shard_hint(x, BATCH, seq_ax, None)
+    positions = jnp.arange(S)[None, :]
+
+    def body(x, lp):
+        out, _, aux = _layer(cfg, x, lp, positions)
+        # sequence-parallel residual stream: the scan carry (= the tensor remat
+        # saves per layer) is sharded over 'model' on the sequence dim, cutting
+        # saved-activation HBM by tp× (Megatron-SP); attention/FFN internals
+        # re-gather as needed (XLA inserts ag/rs — counted in the roofline).
+        out = shard_hint(out, BATCH, seq_ax, None)
+        return out, aux
+
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, auxs = jax.lax.scan(body, x, params["layers"])
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps).astype(cd)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = jnp.einsum("bsd,dv->bsv", x, head.astype(cd))
+    return shard_hint(logits, BATCH, None, "model"), auxs.sum()
+
+
+def loss_fn(params, batch, cfg: TransformerConfig):
+    logits, aux = forward(params, batch["tokens"], cfg)
+    loss = cross_entropy_loss(logits[:, :-1], batch["labels"][:, 1:])
+    return loss + aux, {"loss": loss, "moe_aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+
+def init_kv_cache(cfg: TransformerConfig, batch: int, max_seq: int) -> dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {
+        "k": jnp.zeros(shape, cfg.compute_dtype),
+        "v": jnp.zeros(shape, cfg.compute_dtype),
+    }
+
+
+def prefill(params, tokens, cfg: TransformerConfig, max_seq: int):
+    """Run the prompt; returns (last-position logits, filled cache, length)."""
+    B, S = tokens.shape
+    cd = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0).astype(cd)
+    positions = jnp.arange(S)[None, :]
+    cache = init_kv_cache(cfg, B, max_seq)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        out, (k, v), _ = _layer(cfg, x, lp, positions)
+        ck = jax.lax.dynamic_update_slice(ck, k, (0, 0, 0, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v, (0, 0, 0, 0))
+        return out, (ck, cv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps).astype(cd)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = jnp.einsum("bd,dv->bv", x[:, -1], head.astype(cd))
+    return logits, {"k": ck, "v": cv}, S
+
+
+def decode_step(params, cache: dict, tokens: jnp.ndarray, pos: jnp.ndarray, cfg: TransformerConfig):
+    """One decode step: tokens [B] at absolute position ``pos`` (scalar int32);
+    attends over cache[:pos+1]. Returns (logits [B,V], updated cache)."""
+    B = tokens.shape[0]
+    cd = cfg.compute_dtype
+    x = jnp.take(params["embed"], tokens, axis=0)[:, None, :].astype(cd)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+
+    def body(x, inp):
+        lp, ck, cv = inp
+        out, (nk, nv), _ = _layer(
+            cfg, x, lp, positions, kv_cache=(ck, cv, pos), kv_valid=pos + 1
+        )
+        return out, (nk, nv)
+
+    x, (ck, cv) = jax.lax.scan(body, x, (params["layers"], cache["k"], cache["v"]))
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps).astype(cd)
+    head = params.get("lm_head", params["embed"].T if cfg.tie_embeddings else None)
+    logits = jnp.einsum("bd,dv->bv", x[:, 0], head.astype(cd))
+    return logits, {"k": ck, "v": cv}

@@ -1,0 +1,185 @@
+"""Three-term roofline from dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+  compute    = HLO_FLOPs / peak_FLOPs            (per chip: the compiled module
+  memory     = HLO_bytes / HBM_bw                 is already the SPMD per-device
+  collective = Σ collective_bytes / link_bw       program)
+
+Hardware model: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+collective bytes are parsed from the compiled HLO text: operand shapes of every
+all-gather / all-reduce / reduce-scatter / all-to-all / collective-permute.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from dataclasses import dataclass
+
+PEAK_FLOPS = 197e12  # bf16 per chip
+HBM_BW = 819e9  # B/s per chip
+ICI_BW = 50e9  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+
+_COLL_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|(?P<single>[a-z0-9_\[\],{}\s]*?))\s*"
+    r"(?P<op>all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _line_result_bytes(line: str, op: str) -> int:
+    """Result tensor bytes of an HLO collective line: the shape(s) sit between
+    '=' and the op name (``%ag = f32[2048,1,128]{2,1,0} all-gather(...)``);
+    result size ≈ payload moved per device for ag/ar/rs/a2a/cp."""
+    try:
+        seg = line.split("=", 1)[1]
+        seg = seg[: seg.index(op)]
+    except (IndexError, ValueError):
+        return 0
+    total = 0
+    for m in _SHAPE_RE.finditer(seg):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes_from_hlo(hlo: str) -> dict[str, float]:
+    """Per-collective-type byte totals from compiled HLO text (per device)."""
+    out: dict[str, float] = {}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = _COLL_RE.search(s)
+        if not m:
+            continue
+        if "-done(" in s:
+            continue  # async pairs: count the -start only
+        op = m.group("op")
+        b = _line_result_bytes(s, op)
+        out[op] = out.get(op, 0.0) + b
+    return out
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+
+    @property
+    def dominant(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.__getitem__)
+
+    @property
+    def bound_s(self) -> float:
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+
+def loop_trips(rec: dict) -> int:
+    """XLA cost_analysis (and the HLO text) count while-loop bodies ONCE; the
+    LM cells run scan-over-layers (×L) and grad-accumulation (×micro). Correct
+    by the known outer trip counts (GNN/recsys/gqfast cells unroll — factor 1).
+    Inner attention chunk scans still undercount prefill/decode slightly
+    (documented in EXPERIMENTS.md §Roofline)."""
+    try:
+        from repro.configs.registry import get_arch
+
+        arch = get_arch(rec["arch"])
+        if arch.kind != "lm":
+            return 1
+        L = arch.full.n_layers
+        if rec.get("kind") == "train":
+            import re as _re
+
+            m = _re.search(r"micro=(\d+)", rec.get("notes", ""))
+            micro = int(m.group(1)) if m else 1
+            return L * micro
+        return L
+    except Exception:
+        return 1
+
+
+def roofline_from_record(rec: dict, chips: int = 256) -> Roofline:
+    coll = sum(rec.get("collectives", {}).values())
+    trips = loop_trips(rec)
+    return Roofline(
+        compute_s=rec.get("flops", 0.0) * trips / PEAK_FLOPS,
+        memory_s=rec.get("bytes_accessed", 0.0) * trips / HBM_BW,
+        collective_s=coll * trips / ICI_BW,
+    )
+
+
+def load_records(art_dir: str = "artifacts/dryrun") -> list[dict]:
+    recs = []
+    if not os.path.isdir(art_dir):
+        return recs
+    for name in sorted(os.listdir(art_dir)):
+        if name.endswith(".json"):
+            with open(os.path.join(art_dir, name)) as f:
+                recs.append(json.load(f))
+    return recs
+
+
+def report(art_dir: str = "artifacts/dryrun", mesh: str | None = "pod_16x16") -> str:
+    """Markdown roofline table over all recorded cells."""
+    rows = []
+    header = (
+        "| arch | shape | mesh | compute (s) | memory (s) | collective (s) | "
+        "dominant | MODEL_FLOPS/HLO_FLOPs | bytes/dev | note |"
+    )
+    rows.append(header)
+    rows.append("|" + "---|" * 10)
+    for rec in load_records(art_dir):
+        if mesh and rec.get("mesh") != mesh:
+            continue
+        if rec.get("variant"):
+            continue  # perf variants reported in §Perf, not the baseline table
+        if rec["status"] == "skipped":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — | — | "
+                f"— | — | — | SKIP: {rec['reason'][:60]}… |"
+            )
+            continue
+        if rec["status"] != "ok":
+            rows.append(
+                f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | — | — | — | "
+                f"— | — | — | ERROR: {rec['error'][:60]} |"
+            )
+            continue
+        rl = roofline_from_record(rec)
+        mf = rec.get("model_flops") or 0.0
+        # model_flops is the GLOBAL estimate; compiled flops are per device
+        chips = 512 if "multipod" in rec["mesh"] else 256
+        trips = loop_trips(rec)
+        ratio = (mf / chips) / (rec["flops"] * trips) if rec.get("flops") else 0.0
+        mem = rec.get("memory", {})
+        dev_bytes = mem.get("argument_size_in_bytes", 0) + mem.get("temp_size_in_bytes", 0)
+        rows.append(
+            f"| {rec['arch']} | {rec['shape']} | {rec['mesh']} | "
+            f"{rl.compute_s:.4f} | {rl.memory_s:.4f} | {rl.collective_s:.4f} | "
+            f"**{rl.dominant}** | {ratio:.2f} | {dev_bytes/1e9:.2f} GB | {rec.get('notes','')} |"
+        )
+    return "\n".join(rows)
+
+
+if __name__ == "__main__":
+    import sys
+
+    print(report(sys.argv[1] if len(sys.argv) > 1 else "artifacts/dryrun",
+                 mesh=None))

@@ -1,0 +1,114 @@
+"""Checkpoint manager + fault-tolerant train loop tests."""
+import os
+import shutil
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.ckpt.manager import CheckpointManager
+from repro.data.lm_data import lm_batch
+from repro.models.transformer import TransformerConfig, init_params, loss_fn
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update, cosine_warmup
+from repro.train.loop import TrainLoopConfig, train
+
+CFG = TransformerConfig("t", 2, 64, 4, 2, 128, 211, d_head=16, remat=False,
+                        attn_kv_chunk=32)
+
+
+@pytest.fixture()
+def tmp(tmp_path):
+    return str(tmp_path)
+
+
+@pytest.fixture(scope="module")
+def params():
+    return init_params(CFG, jax.random.key(0))
+
+
+def _lf(p, b):
+    return loss_fn(p, b, CFG)
+
+
+def _data(s):
+    return lm_batch(s, 8, 32, 211, seed=1)
+
+
+def test_save_restore_roundtrip(tmp, params):
+    mgr = CheckpointManager(tmp, keep=2)
+    tree = {"a": jnp.arange(10.0), "b": {"c": jnp.ones((3, 4)), "d": [jnp.zeros(2)]}}
+    mgr.save(5, tree)
+    restored, meta = mgr.restore(jax.tree.map(lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree))
+    assert meta["step"] == 5
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention(tmp):
+    mgr = CheckpointManager(tmp, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, {"x": jnp.ones(3) * s})
+    assert mgr.list_steps() == [3, 4]
+
+
+def test_atomicity_no_partial_dirs(tmp):
+    mgr = CheckpointManager(tmp, keep=3)
+    mgr.save(1, {"x": jnp.ones(3)})
+    names = os.listdir(tmp)
+    assert all(not n.startswith(".tmp_ckpt_") for n in names)
+
+
+def test_restore_resharding_elastic(tmp):
+    """Save on the default device; restore with an explicit 1-device mesh
+    sharding (the elastic-restart path at CPU scale)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    mgr = CheckpointManager(tmp, keep=1)
+    tree = {"w": jnp.arange(16.0).reshape(4, 4)}
+    mgr.save(1, tree)
+    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    sh = {"w": NamedSharding(mesh, P("data", None))}
+    restored, _ = mgr.restore(tree, shardings=sh)
+    np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))
+    assert restored["w"].sharding.spec == P("data", None)
+
+
+def test_loss_decreases(tmp, params):
+    lc = TrainLoopConfig(total_steps=20, ckpt_every=100, ckpt_dir=tmp)
+    oc = AdamWConfig(lr=cosine_warmup(3e-3, 3, 20), weight_decay=0.01)
+    _, res = train(params, _lf, _data, lc, oc, resume=False)
+    assert res.history[-1]["loss"] < res.history[0]["loss"]
+    assert res.step == 20
+
+
+def test_preempt_resume_bit_identical(tmp, params):
+    lc = TrainLoopConfig(total_steps=14, ckpt_every=100, ckpt_dir=tmp)
+    oc = AdamWConfig(lr=1e-3)
+    pA, _ = train(params, _lf, _data, lc, oc, resume=False)
+    shutil.rmtree(tmp)
+    _, r1 = train(params, _lf, _data, lc, oc, resume=False, preempt_at=7)
+    assert r1.preempted and r1.step == 7
+    pB, r2 = train(params, _lf, _data, lc, oc, resume=True)
+    assert r2.resumed_from == 7
+    for a, b in zip(jax.tree.leaves(pA), jax.tree.leaves(pB)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_int8_moments_match_fp32_convergence(tmp, params):
+    lcs = TrainLoopConfig(total_steps=10, ckpt_every=100, ckpt_dir=tmp)
+    losses = {}
+    for name, oc in [("fp32", AdamWConfig(lr=3e-3)),
+                     ("int8", AdamWConfig(lr=3e-3, quantize_moments=True))]:
+        shutil.rmtree(tmp, ignore_errors=True)
+        _, res = train(params, _lf, _data, lcs, oc, resume=False)
+        losses[name] = res.history[-1]["loss"]
+    assert abs(losses["int8"] - losses["fp32"]) / losses["fp32"] < 0.05
+
+
+def test_straggler_telemetry_fields(tmp, params):
+    lc = TrainLoopConfig(total_steps=5, ckpt_every=100, ckpt_dir=tmp)
+    _, res = train(params, _lf, _data, lc, AdamWConfig(lr=1e-3), resume=False)
+    for rec in res.history:
+        assert set(rec) >= {"step", "loss", "grad_norm", "step_time", "straggler"}

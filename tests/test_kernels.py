@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True on CPU) vs the pure-jnp
+oracles in kernels/ref.py, plus hypothesis property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core.codecs import pack_bits
+from repro.kernels import ops, ref
+
+settings.register_profile("k", deadline=None, max_examples=15)
+settings.load_profile("k")
+
+
+def _pack_words(vals, width):
+    buf = pack_bits(vals, width)
+    pad = (-len(buf)) % 4
+    return np.frombuffer(buf.tobytes() + b"\0" * pad, dtype=np.uint32)
+
+
+@pytest.mark.parametrize("width", [1, 3, 5, 8, 12, 16, 17, 24, 31])
+@pytest.mark.parametrize("count", [1, 1000, 1024, 2050])
+def test_bitunpack_sweep(width, count):
+    rng = np.random.default_rng(width * 1000 + count)
+    vals = rng.integers(0, 2**width, size=count, dtype=np.uint64)
+    words = _pack_words(vals, width)
+    got = np.asarray(ops.bitunpack(words, width, count))
+    assert np.array_equal(got, vals.astype(np.int64))
+    refv = np.asarray(ref.bitunpack_ref(jnp.asarray(words), width, count))
+    assert np.array_equal(refv, vals.astype(np.int64))
+
+
+@given(st.integers(1, 31), st.integers(1, 3000), st.integers(0, 2**31))
+def test_bitunpack_property(width, count, seed):
+    rng = np.random.default_rng(seed)
+    vals = rng.integers(0, 2**width, size=count, dtype=np.uint64)
+    words = _pack_words(vals, width)
+    got = np.asarray(ops.bitunpack(words, width, count, use_pallas=False))
+    assert np.array_equal(got, vals.astype(np.int64))
+
+
+@pytest.mark.parametrize(
+    "n_src,n_dst,E", [(100, 80, 500), (1000, 1000, 10000), (17, 5, 3), (4096, 4096, 4096)]
+)
+def test_fragment_spmv_sweep(n_src, n_dst, E):
+    rng = np.random.default_rng(n_src + E)
+    w = rng.random(n_src).astype(np.float32)
+    src = rng.integers(0, n_src, E).astype(np.int32)
+    dst = rng.integers(0, n_dst, E).astype(np.int32)
+    m = rng.random(E).astype(np.float32)
+    expect = np.zeros(n_dst, np.float64)
+    np.add.at(expect, dst, w[src].astype(np.float64) * m)
+    for use_pallas in (True, False):
+        got = np.asarray(ops.fragment_spmv(w, src, dst, m, n_dst, use_pallas=use_pallas))
+        np.testing.assert_allclose(got, expect, rtol=1e-4, atol=1e-5)
+
+
+def test_fragment_spmv_is_one_hop():
+    """Kernel result == one frontier RelHop of the query engine."""
+    from repro.core.engine import GQFastDatabase
+    from repro.data.synth_graph import make_pubmed
+
+    schema = make_pubmed(n_docs=300, n_terms=30, n_authors=100)
+    db = GQFastDatabase(schema, account_space=False)
+    di = db.device.index("DT", "Doc")
+    n_terms = schema.entities["Term"].size
+    w = np.zeros(schema.entities["Document"].size, np.float32)
+    w[5] = 1.0
+    got = np.asarray(
+        ops.fragment_spmv(w, di.src_ids, di.dst_ids, di.measures["Fre"], n_terms)
+    )
+    dt = schema.relationships["DT"]
+    expect = np.zeros(n_terms)
+    sel = dt.columns["Doc"] == 5
+    np.add.at(expect, dt.columns["Term"][sel], dt.columns["Fre"][sel].astype(float))
+    np.testing.assert_allclose(got, expect, rtol=1e-5)
+
+
+@pytest.mark.parametrize("n", [1, 100, 1024, 5000])
+def test_bitmap_ops_sweep(n):
+    rng = np.random.default_rng(n)
+    a = rng.integers(0, 2**32, n, dtype=np.uint32)
+    b = rng.integers(0, 2**32, n, dtype=np.uint32)
+    assert np.array_equal(np.asarray(ops.bitmap_and(a, b)), a & b)
+    pc = int(ops.bitmap_and_popcount(a, b))
+    assert pc == int(np.unpackbits((a & b).view(np.uint8)).sum())
+
+
+@given(st.integers(1, 4000), st.integers(0, 2**31))
+def test_bitmap_popcount_property(n, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2**32, n, dtype=np.uint32)
+    b = rng.integers(0, 2**32, n, dtype=np.uint32)
+    assert int(ops.bitmap_and_popcount(a, b, use_pallas=False)) == int(
+        np.unpackbits((a & b).view(np.uint8)).sum()
+    )
+
+
+def test_bitunpack_matches_loader_packing():
+    """End-to-end: FragmentIndex packed column → kernel decode == host values."""
+    from repro.core.engine import GQFastDatabase
+    from repro.data.synth_graph import make_pubmed
+
+    schema = make_pubmed(n_docs=200, n_terms=40, n_authors=80)
+    db = GQFastDatabase(schema, account_space=False, keep_packed=True)
+    idx = db.host_indexes[("DT", "Doc")]
+    cf = idx.columns["Term"]
+    got = np.asarray(ops.bitunpack(jnp.asarray(cf.packed), cf.packed_width, len(cf.values)))
+    assert np.array_equal(got, cf.values)

@@ -1,0 +1,148 @@
+"""GNN + equivariance tests: SH/Wigner/CG properties (hypothesis over random
+rotations), model rotation invariance, permutation invariance, shapes."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.graphs import CSRGraph, NeighborSampler, make_feature_graph, make_molecule_batch
+from repro.models.gnn.equivariant import (
+    l_slices,
+    real_cg,
+    real_sph_harm,
+    rotation_to_edge_frame,
+    wigner_d_real,
+)
+from repro.models.gnn.models import GNNConfig, gnn_apply, gnn_init, gnn_loss
+
+settings.register_profile("g", deadline=None, max_examples=10)
+settings.load_profile("g")
+
+CONFIGS = [
+    GNNConfig("schnet-s", "schnet", 2, 32, n_rbf=8, cutoff=6.0),
+    GNNConfig("egnn-s", "egnn", 2, 32),
+    GNNConfig("mace-s", "mace", 2, 16, n_rbf=8, cutoff=6.0, l_max=2, correlation=3),
+    GNNConfig("eqv2-s", "equiformer_v2", 2, 16, l_max=3, m_max=2, n_heads=4,
+              n_rbf=8, cutoff=6.0),
+]
+
+
+def _rand_rot(seed):
+    rng = np.random.default_rng(seed)
+    Q, _ = np.linalg.qr(rng.normal(size=(3, 3)))
+    if np.linalg.det(Q) < 0:
+        Q[:, 0] *= -1
+    return jnp.asarray(Q, jnp.float32)
+
+
+@given(st.integers(0, 2**31))
+def test_sph_harm_equivariance(seed):
+    R = _rand_rot(seed)
+    rng = np.random.default_rng(seed)
+    v = rng.normal(size=(20, 3))
+    v = jnp.asarray(v / np.linalg.norm(v, axis=1, keepdims=True), jnp.float32)
+    l_max = 4
+    Y = real_sph_harm(l_max, v)
+    Yr = real_sph_harm(l_max, jnp.einsum("ij,nj->ni", R, v))
+    D = wigner_d_real(l_max, R)
+    for l, sl in enumerate(l_slices(l_max)):
+        np.testing.assert_allclose(
+            np.asarray(jnp.einsum("mk,nk->nm", D[l], Y[:, sl])),
+            np.asarray(Yr[:, sl]), atol=5e-5,
+        )
+
+
+@given(st.integers(0, 2**31))
+def test_wigner_orthogonality(seed):
+    D = wigner_d_real(4, _rand_rot(seed))
+    for l, d in enumerate(D):
+        np.testing.assert_allclose(np.asarray(d @ d.T), np.eye(2 * l + 1), atol=5e-5)
+
+
+@pytest.mark.parametrize("l1,l2,l3", [(1, 1, 2), (2, 2, 2), (1, 2, 3), (2, 2, 0)])
+def test_real_cg_equivariance(l1, l2, l3):
+    C = jnp.asarray(real_cg(l1, l2, l3))
+    R = _rand_rot(l1 * 100 + l2 * 10 + l3)
+    D = wigner_d_real(max(l1, l2, l3), R)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(2 * l1 + 1,)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(2 * l2 + 1,)), jnp.float32)
+    z = jnp.einsum("ijk,i,j->k", C, x, y)
+    zr = jnp.einsum("ijk,i,j->k", C, D[l1] @ x, D[l2] @ y)
+    np.testing.assert_allclose(np.asarray(D[l3] @ z), np.asarray(zr), atol=1e-5)
+
+
+def test_edge_frame_maps_to_z():
+    rng = np.random.default_rng(0)
+    v = jnp.asarray(rng.normal(size=(50, 3)), jnp.float32)
+    R = rotation_to_edge_frame(v)
+    n = v / jnp.linalg.norm(v, axis=1, keepdims=True)
+    out = jnp.einsum("eij,ej->ei", R, n)
+    np.testing.assert_allclose(np.asarray(out[:, 2]), 1.0, atol=1e-5)
+    # proper rotations
+    det = np.linalg.det(np.asarray(R))
+    np.testing.assert_allclose(det, 1.0, atol=1e-5)
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c.arch for c in CONFIGS])
+def test_rotation_invariance(cfg):
+    mol = make_molecule_batch(batch=4, n_nodes=8, n_edges=16)
+    binp = mol.as_inputs()
+    rot = dict(binp)
+    rot["pos"] = binp["pos"] @ _rand_rot(7).T
+    p = gnn_init(cfg, jax.random.key(0))
+    e1 = gnn_apply(p, binp, cfg, 4)
+    e2 = gnn_apply(p, rot, cfg, 4)
+    scale = float(jnp.abs(e1).max()) + 1e-9
+    assert float(jnp.abs(e1 - e2).max()) / scale < 2e-2, cfg.arch
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c.arch for c in CONFIGS])
+def test_translation_invariance(cfg):
+    mol = make_molecule_batch(batch=2, n_nodes=6, n_edges=12)
+    binp = mol.as_inputs()
+    tr = dict(binp)
+    tr["pos"] = binp["pos"] + jnp.asarray([1.5, -2.0, 0.7])
+    p = gnn_init(cfg, jax.random.key(0))
+    e1, e2 = gnn_apply(p, binp, cfg, 2), gnn_apply(p, tr, cfg, 2)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-3, atol=1e-4)
+
+
+@pytest.mark.parametrize("cfg", CONFIGS, ids=[c.arch for c in CONFIGS])
+def test_edge_mask_zeroes_padding(cfg):
+    """Adding masked-out padding edges must not change the output."""
+    mol = make_molecule_batch(batch=2, n_nodes=6, n_edges=12)
+    b = mol.as_inputs()
+    p = gnn_init(cfg, jax.random.key(0))
+    e1 = gnn_apply(p, b, cfg, 2)
+    b2 = dict(b)
+    pad = 8
+    b2["edge_src"] = jnp.concatenate([b["edge_src"], jnp.zeros(pad, jnp.int32)])
+    b2["edge_dst"] = jnp.concatenate([b["edge_dst"], jnp.ones(pad, jnp.int32)])
+    b2["edge_mask"] = jnp.concatenate([b["edge_mask"], jnp.zeros(pad)])
+    e2 = gnn_apply(p, b2, cfg, 2)
+    np.testing.assert_allclose(np.asarray(e1), np.asarray(e2), rtol=1e-4, atol=1e-5)
+
+
+def test_node_classification_head():
+    g = make_feature_graph(100, 400, d_feat=16, n_classes=5)
+    cfg = GNNConfig("s", "schnet", 2, 16, n_rbf=8, d_feat=16, n_classes=5)
+    p = gnn_init(cfg, jax.random.key(0))
+    logits = gnn_apply(p, g.as_inputs(), cfg)
+    assert logits.shape == (100, 5)
+    loss, _ = gnn_loss(p, g.as_inputs(), cfg)
+    assert bool(jnp.isfinite(loss))
+
+
+def test_neighbor_sampler_budgets():
+    g = CSRGraph.random(5000, 50000, d_feat=8)
+    s = NeighborSampler(g, fanouts=[5, 3], batch_nodes=64)
+    batch = s.sample()
+    assert batch.edge_src.shape == batch.edge_dst.shape == batch.edge_mask.shape
+    assert batch.edge_src.shape[0] == 64 * 5 * (1 + 3)
+    assert int(batch.edge_src.max()) < batch.pos.shape[0]
+    # sampled edges actually exist in the CSR graph (for unmasked entries)
+    uniq = np.unique(np.concatenate([np.asarray(batch.edge_src), np.asarray(batch.edge_dst)]))
+    assert uniq.shape[0] <= batch.pos.shape[0]

@@ -1,0 +1,104 @@
+"""SQL parser + RQNA normalizer/verifier tests."""
+import pytest
+
+from repro.core.algebra import EntityStep, RelHop, SeedIds, SeedMask
+from repro.core.planner import NotRelationshipQuery, plan_query
+from repro.core.sql import parse
+from repro.data import synth_graph as SG
+
+
+@pytest.fixture(scope="module")
+def pubmed():
+    return SG.make_pubmed(n_docs=100, n_terms=20, n_authors=50)
+
+
+def test_parse_as(pubmed):
+    q = parse(SG.QUERY_AS)
+    assert len(q.tables) == 5
+    assert len(q.join_conds) == 4
+    assert q.group_by is not None
+
+
+def test_plan_as_chain(pubmed):
+    p = plan_query(pubmed, parse(SG.QUERY_AS))
+    kinds = [type(s).__name__ for s in p.steps]
+    assert kinds == ["RelHop", "RelHop", "RelHop", "EntityStep", "RelHop"]
+    assert isinstance(p.seed, SeedIds) and p.seed.entity == "Author"
+    assert p.group_entity == "Author" and p.agg == "sum"
+    # measures attached to the two DT hops; year factor on the entity step
+    dt_hops = [s for s in p.steps if isinstance(s, RelHop) and s.table == "DT"]
+    assert all(h.measure_expr is not None for h in dt_hops)
+    ent = [s for s in p.steps if isinstance(s, EntityStep)][0]
+    assert ent.factor_expr is not None
+
+
+def test_plan_ad_semijoin_mask(pubmed):
+    p = plan_query(pubmed, parse(SG.QUERY_AD))
+    assert isinstance(p.seed, SeedMask) and p.seed.entity == "Document"
+    assert len(p.seed.chains) == 2
+    assert p.steps[0].semijoin and p.agg == "count"
+
+
+def test_plan_recent_authors_degree_filter(pubmed):
+    p = plan_query(pubmed, parse(SG.QUERY_RECENT_AUTHORS))
+    assert p.group_entity is None and p.output_ref.attr == "Author"
+    assert isinstance(p.seed, SeedMask) and len(p.seed.chains) == 2
+    assert p.seed.entity_conds, "Year > :y must become an entity condition"
+    # third chain projects da.Doc → degree-filter hop
+    sub = p.seed.chains[-1]
+    assert sub.steps[-1].degree_filter
+
+
+def test_plan_cs_comma_joins():
+    sem = SG.make_semmeddb(50, 60, 80, 200)
+    p = plan_query(sem, parse(SG.QUERY_CS))
+    assert [s.table for s in p.steps] == ["SP", "PA", "CS"]
+    assert p.steps[0].semijoin
+    assert p.group_entity == "Concept"
+
+
+def test_group_by_relationship_id_quirk(pubmed):
+    # the paper writes GROUP BY da2.ID on a relationship variable
+    p = plan_query(pubmed, parse(SG.QUERY_AS))
+    assert p.group_ref.attr == "Author"
+
+
+def test_rejects_non_key_join(pubmed):
+    bad = "SELECT dt.Doc, COUNT(*) FROM DT dt JOIN Document d ON dt.Fre = d.Year WHERE dt.Doc = 1 GROUP BY dt.Doc"
+    with pytest.raises(NotRelationshipQuery):
+        plan_query(pubmed, parse(bad))
+
+
+def test_rejects_unknown_table(pubmed):
+    with pytest.raises(NotRelationshipQuery):
+        plan_query(pubmed, parse("SELECT x.A FROM Nope x WHERE x.A = 1"))
+
+
+def test_rejects_no_seed(pubmed):
+    bad = "SELECT dt.Doc, COUNT(*) FROM DT dt GROUP BY dt.Doc"
+    with pytest.raises(NotRelationshipQuery):
+        plan_query(pubmed, parse(bad))
+
+
+def test_rejects_nonmultiplicative_score(pubmed):
+    bad = """SELECT dt2.Doc, SUM(dt1.Fre + dt2.Fre)
+             FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+             WHERE dt1.Doc = 1 GROUP BY dt2.Doc"""
+    with pytest.raises(NotRelationshipQuery):
+        plan_query(pubmed, parse(bad))
+
+
+def test_parse_intersect_inside_parens(pubmed):
+    q = """SELECT da.Author, COUNT(*) FROM DA da WHERE da.Doc IN
+           ((SELECT dt.Doc FROM DT dt WHERE dt.Term = 1)
+            INTERSECT (SELECT dt.Doc FROM DT dt WHERE dt.Term = 2))
+           GROUP BY da.Author"""
+    p = plan_query(pubmed, parse(q))
+    assert len(p.seed.chains) == 2
+
+
+def test_parse_errors():
+    with pytest.raises(SyntaxError):
+        parse("SELECT FROM x")
+    with pytest.raises(SyntaxError):
+        parse("SELECT a.b FROM T t WHERE a.b ~ 3")
