@@ -53,7 +53,7 @@ def run() -> None:
         "from repro.core.engine import GQFastDatabase, GQFastEngine;"
         "schema = make_pubmed(n_docs=20000, n_terms=800, n_authors=5000, seed=11);"
         "db = GQFastDatabase(schema, account_space=False);"
-        "mesh = jax.make_mesh((len(jax.devices()),), ('data',), axis_types=(jax.sharding.AxisType.Auto,));"
+        "from repro.launch.mesh import make_mesh; mesh = make_mesh((len(jax.devices()),), ('data',));"
         "eng = GQFastEngine(db, mesh=mesh);"
         "pq = eng.prepare(QUERY_AS);"
         "[np.asarray(pq(a0=17)) for _ in range(2)];"

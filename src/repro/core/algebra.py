@@ -134,7 +134,7 @@ class Subquery:
 class SelectItem:
     expr: Expr | None  # None for plain column
     ref: Ref | None
-    agg: str | None  # count | sum | None
+    agg: str | None  # count | sum | min | max | avg | exists | None
 
 
 @dataclass
@@ -208,7 +208,7 @@ class ChainPlan:
     steps: list[RelHop | EntityStep]
     group_entity: str | None  # None → plan yields a mask/id-set (subquery)
     group_ref: Ref | None
-    agg: str | None  # count | sum
+    agg: str | None  # count | sum | min | max | avg | exists (picks the semiring)
     output_ref: Ref | None = None  # projected column for mask-producing plans
 
     def domains(self) -> list[str]:

@@ -14,6 +14,7 @@ import numpy as np
 from . import executor as X
 from .algebra import ChainPlan
 from .fragments import FragmentIndex, build_index
+from .lower import PhysicalPlan, lower
 from .planner import plan_query
 from .schema import RelationshipTable, Schema
 from .sql import parse
@@ -65,6 +66,7 @@ class PreparedQuery:
     fn: Callable[..., Any]
     param_names: list[str]
     group_entity: str | None
+    phys: PhysicalPlan | None = None  # lowered IR (None only for legacy callers)
 
     def __call__(self, **params) -> np.ndarray:
         args = [params[n] for n in self.param_names]
@@ -92,17 +94,20 @@ class GQFastEngine:
         if key in self._cache:
             return self._cache[key]
         plan = plan_query(self.db.schema, parse(sql))
-        names = X.collect_params(plan)
+        # lower once: every strategy interprets the same physical IR, and the
+        # per-execute mask/ref-resolution work is hoisted out of the hot path
+        phys = lower(self.db.device, plan)
+        names = list(phys.param_names)
         if self.mesh is not None:
             fn = X.compile_frontier_distributed(
-                self.db.device, plan, self.mesh, self.shard_axes
+                self.db.device, phys, self.mesh, self.shard_axes
             )
         else:
             strategy = self.strategy
             if strategy == "auto":
                 strategy = self._pick_strategy(plan)
-            fn = X.STRATEGIES[strategy](self.db.device, plan)
-        pq = PreparedQuery(sql, plan, fn, names, plan.group_entity)
+            fn = X.STRATEGIES[strategy](self.db.device, phys)
+        pq = PreparedQuery(sql, plan, fn, names, plan.group_entity, phys)
         self._cache[key] = pq
         return pq
 

@@ -1,16 +1,25 @@
 """Plan execution — the JAX analogue of the paper's code generator (§6.2).
 
-Strategies (DESIGN.md §2):
-  * ``frontier`` — bottom-up fully pipelined execution, TPU-native: the chain of
-    hops becomes a chain of gather ⊙ measure → ``segment_sum`` SpMV steps over
-    dense per-entity-domain vectors. JAX tracing fuses the whole plan into one
-    XLA executable; intermediates are vectors, never materialized join tables.
-  * ``fragment_loop`` — paper-faithful port of the generated C++ (Fig. 3): nested
-    ``lax.fori_loop``s walk one fragment at a time, scalar accumulator updates.
-    The §Perf baseline demonstrating why the vectorized rewrite is needed on TPU.
-  * distributed variant — edge-sharded shard_map with one psum per hop
+Every strategy is a *thin interpreter* over the lowered physical IR built by
+:mod:`repro.core.lower` (DESIGN.md §2): one shared continuation-passing walker
+(:func:`walk_ir`) folds the op sequence, and the strategies differ only in the
+primitive each op maps to:
+
+  * ``frontier`` — bottom-up fully pipelined execution, TPU-native: each HopOp
+    dispatches through :func:`repro.kernels.ops.fragment_spmv` (Pallas on TPU,
+    interpret/XLA fallback on CPU) over dense per-entity-domain vectors. JAX
+    tracing fuses the whole plan into one XLA executable; intermediates are
+    vectors, never materialized join tables.
+  * ``fragment_loop`` — paper-faithful port of the generated C++ (Fig. 3):
+    nested ``lax.fori_loop``s walk one fragment at a time, scalar accumulator
+    updates. The §Perf baseline demonstrating why the vectorized rewrite is
+    needed on TPU.
+  * distributed variant — edge-sharded shard_map with one collective per hop
     (the paper's multi-thread shared-accumulator design, contention-free).
 
+Aggregation semantics are pluggable (DESIGN.md §3): the walker is parameterized
+by a :class:`repro.core.semiring.Semiring`, so SUM/COUNT, MIN/MAX, EXISTS and
+the fused AVG pair all execute through the same code path in every strategy.
 All strategies return the dense γ accumulator ℛ over the group-by entity domain
 (the paper's aggregation array; size = domain of the group key).
 """
@@ -25,19 +34,21 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from .algebra import (
-    ChainPlan,
-    ConstCond,
-    EntityStep,
-    Param,
-    RelHop,
-    SeedIds,
-    SeedMask,
-    eval_expr,
-    expr_refs,
-)
+from .algebra import ChainPlan, EntityStep, Param, RelHop, SeedIds
 from .fragments import FragmentIndex
+from .lower import (
+    DegreeFilterOp,
+    EntityFilterOp,
+    GroupOp,
+    HopOp,
+    LParam,
+    PhysicalPlan,
+    SeedOp,
+    eval_lexpr,
+    lower,
+)
 from .schema import Schema
+from .semiring import BOOL_OR_AND, Semiring, semiring_for
 
 
 @dataclass
@@ -128,115 +139,167 @@ def collect_params(plan: ChainPlan) -> list[str]:
     return names
 
 
-def _resolve(v, params: dict[str, Any]):
-    return params[v.name] if isinstance(v, Param) else v
+def ensure_lowered(db: DeviceDB, plan: ChainPlan | PhysicalPlan) -> PhysicalPlan:
+    return plan if isinstance(plan, PhysicalPlan) else lower(db, plan)
 
 
 # ---------------------------------------------------------------------------
-# Frontier strategy
+# The shared lowered-IR walker
 # ---------------------------------------------------------------------------
 
 
-def _seed_scalars(db: DeviceDB, seed: SeedIds, refs_needed: set, params) -> dict:
-    """Entity attributes of the seeded id, as traced scalars (e.g. d1.Year)."""
-    env = {}
-    sid = None
-    ids = seed.ids if isinstance(seed.ids, list) else [seed.ids]
-    if len(ids) == 1:
-        sid = _resolve(ids[0], params)
-    for (var, attr) in refs_needed:
-        if var == seed.var:
-            assert sid is not None, "seed scalar needs a single seed id"
-            env[(var, attr)] = db.entity_attrs[(seed.entity, attr)][sid]
-    return env
+def walk_ir(phys: PhysicalPlan, interp: "_Interp"):
+    """Fold the op sequence through ``interp``. Continuation-passing so the
+    scalar strategy can emit its nested fragment loops from the same walk."""
+    ops = phys.ops
+
+    def go(i: int, state):
+        if i == len(ops):
+            return state
+        return interp.apply(ops[i], state, lambda st: go(i + 1, st))
+
+    return go(0, None)
 
 
-def _cond_mask(db: DeviceDB, entity: str, conds: list[ConstCond], params) -> jnp.ndarray:
-    dom = db.schema.domain_size(entity)
-    mask = jnp.ones(dom, dtype=jnp.float32)
-    for c in conds:
-        col = db.entity_attrs[(entity, c.ref.attr)]
-        v = _resolve(c.value, params)
-        m = {
-            "=": col == v, ">": col > v, "<": col < v,
-            ">=": col >= v, "<=": col <= v,
-        }[c.op]
-        mask = mask * m.astype(jnp.float32)
-    return mask
+def execute_ir(phys: PhysicalPlan, make_interp) -> jnp.ndarray:
+    """Strategy-independent top level: pick the semiring for the plan's
+    aggregate, run the walker (twice for AVG's fused SUM+COUNT pair), and
+    apply the output convention."""
+    sr = semiring_for(phys.agg)
+    if phys.agg == "avg":
+        # two walks in one traced program; XLA CSE merges everything the
+        # weighted and count passes share (all hops up to the first measure)
+        s = walk_ir(phys, make_interp(sr, True))
+        c = walk_ir(phys, make_interp(sr, False))
+        return jnp.where(c > 0, s / c, 0.0)
+    return sr.finalize(walk_ir(phys, make_interp(sr, True)))
 
 
-def _frontier_eval(db: DeviceDB, plan: ChainPlan, params: dict[str, Any]) -> jnp.ndarray:
-    """Trace the chain; returns the dense accumulator over the final domain."""
-    # --- seed ---
-    if isinstance(plan.seed, SeedIds):
-        dom = db.schema.domain_size(plan.seed.entity)
-        ids = plan.seed.ids if isinstance(plan.seed.ids, list) else [plan.seed.ids]
-        idx = jnp.asarray([_resolve(i, params) for i in ids], dtype=jnp.int32)
-        w = jnp.zeros(dom, dtype=jnp.float32).at[idx].add(1.0)
-        seed_env_src = plan.seed
-    else:
-        w = _mask_eval(db, plan.seed, params)
-        seed_env_src = None
+class _Interp:
+    """Op dispatch + parameter/seed-scalar environment shared by strategies."""
 
-    # seed scalars needed anywhere downstream
-    needed = set()
-    for s in plan.steps:
-        e = s.measure_expr if isinstance(s, RelHop) else s.factor_expr
-        if e is not None:
-            needed |= {(r.var, r.attr) for r in expr_refs(e)}
-    scalars = (
-        _seed_scalars(db, seed_env_src, needed, params) if seed_env_src else {}
-    )
+    def __init__(self, params: dict[str, Any], sr: Semiring, use_measures: bool = True):
+        self.params = params
+        self.sr = sr
+        self.use_measures = use_measures
+        self.scalars: dict[tuple, Any] = {}
 
-    # --- steps ---
-    for s in plan.steps:
-        if isinstance(s, RelHop):
-            di = db.index(s.table, s.src_key)
-            if s.semijoin:
-                w = (w > 0).astype(jnp.float32)
-            if s.degree_filter:
-                w = w * (di.degrees > 0).astype(jnp.float32)
-                continue
-            ew = jnp.take(w, di.src_ids)
-            if s.measure_expr is not None:
-                env = dict(scalars)
-                for r in expr_refs(s.measure_expr):
-                    if r.var == s.var:
-                        env[(r.var, r.attr)] = di.measures[r.attr]
-                ew = ew * eval_expr(s.measure_expr, env, params, jnp)
-            dom_dst = db.schema.domain_size(s.dst_entity)
-            w = jax.ops.segment_sum(ew, di.dst_ids, num_segments=dom_dst)
-        else:  # EntityStep
-            if s.factor_expr is not None:
-                env = dict(scalars)
-                for r in expr_refs(s.factor_expr):
-                    if r.var == s.var:
-                        env[(r.var, r.attr)] = db.entity_attrs[(s.entity, r.attr)]
-                w = w * eval_expr(s.factor_expr, env, params, jnp).astype(jnp.float32)
-            if s.conds:
-                w = w * _cond_mask(db, s.entity, s.conds, params)
-    if plan.group_entity is None:
-        return (w > 0).astype(jnp.float32)  # mask-producing chain
-    return w
+    def apply(self, op, state, cont):
+        if isinstance(op, SeedOp):
+            return self.seed(op, state, cont)
+        if isinstance(op, HopOp):
+            return self.hop(op, state, cont)
+        if isinstance(op, DegreeFilterOp):
+            return self.degree_filter(op, state, cont)
+        if isinstance(op, EntityFilterOp):
+            return self.entity_filter(op, state, cont)
+        if isinstance(op, GroupOp):
+            return self.group(op, state, cont)
+        raise TypeError(op)
+
+    def resolve(self, v):
+        return self.params[v.name] if isinstance(v, LParam) else v
+
+    def capture_scalars(self, op: SeedOp, sid):
+        self.scalars = {
+            s.key: self.attr_col(s)[sid] for s in op.scalars.values()
+        }
+
+    # column access — overridden by the distributed interpreter
+    def col(self, c):
+        return c.array
+
+    def attr_col(self, c):
+        return c.array
 
 
-def _mask_eval(db: DeviceDB, seed: SeedMask, params) -> jnp.ndarray:
-    dom = db.schema.domain_size(seed.entity)
-    mask = jnp.ones(dom, dtype=jnp.float32)
-    for chain in seed.chains:
-        mask = mask * _frontier_eval(db, chain, params)
-    if seed.entity_conds:
-        mask = mask * _cond_mask(db, seed.entity, seed.entity_conds, params)
-    return mask
+# ---------------------------------------------------------------------------
+# Frontier strategy (and its edge-sharded distributed variant)
+# ---------------------------------------------------------------------------
 
 
-def compile_frontier(db: DeviceDB, plan: ChainPlan) -> Callable[..., jnp.ndarray]:
-    names = collect_params(plan)
+class _FrontierInterp(_Interp):
+    """Dense frontier vectors; each hop is one fused gather⊗measure→scatter-⊕
+    kernel call."""
+
+    def spawn(self) -> "_FrontierInterp":
+        """Interpreter for a mask sub-program (always the boolean semiring)."""
+        return _FrontierInterp(self.params, BOOL_OR_AND)
+
+    def seed(self, op: SeedOp, state, cont):
+        sr = self.sr
+        if op.ids is not None:
+            idx = jnp.asarray([self.resolve(i) for i in op.ids], dtype=jnp.int32)
+            # scatter-⊕, not set: duplicate seed ids must accumulate
+            # multiplicity under the sum semiring (matches the oracle and the
+            # per-seed unrolling of the fragment_loop strategy)
+            w = sr.scatter(jnp.full(op.dom, sr.zero, jnp.float32), idx, sr.one)
+            if op.scalars:
+                self.capture_scalars(op, self.resolve(op.ids[0]))
+            return cont(w)
+        m = jnp.ones(op.dom, jnp.float32)
+        for prog in op.programs:
+            m = m * walk_ir(prog, self.spawn())
+        if op.const_mask is not None:
+            m = m * op.const_mask
+        for c in op.param_conds:
+            m = m * c.mask(self.params, self.attr_col).astype(jnp.float32)
+        return cont(sr.from_mask(m))
+
+    def hop(self, op: HopOp, state, cont):
+        sr, w = self.sr, state
+        if op.semijoin:
+            w = sr.binarize(w)
+        src, dst, valid = self.edge_arrays(op)
+        E = src.shape[0]
+        if op.measure is not None and self.use_measures:
+            m = eval_lexpr(op.measure, self.params, self.scalars, self.col)
+            m = jnp.broadcast_to(jnp.asarray(m, jnp.float32), (E,))
+        else:
+            m = jnp.ones(E, jnp.float32)
+        return cont(self.spmv(w, src, dst, m, valid, op))
+
+    def edge_arrays(self, op: HopOp):
+        return op.src_ids, op.dst_ids, None
+
+    def spmv(self, w, src, dst, m, valid, op: HopOp):
+        from ..kernels import ops as K
+
+        return K.fragment_spmv(w, src, dst, m, n_dst=op.dom_dst, op=self.sr.name)
+
+    def degree_filter(self, op: DegreeFilterOp, state, cont):
+        return cont(self.sr.mask(state, self.degrees(op) > 0))
+
+    def degrees(self, op: DegreeFilterOp):
+        return op.degrees
+
+    def entity_filter(self, op: EntityFilterOp, state, cont):
+        w = state
+        if op.factor is not None and self.use_measures:
+            f = eval_lexpr(op.factor, self.params, self.scalars, self.col)
+            w = self.sr.extend(w, jnp.asarray(f, jnp.float32))
+        if op.const_mask is not None:
+            w = self.sr.mask(w, op.const_mask)
+        for c in op.param_conds:
+            w = self.sr.mask(w, c.mask(self.params, self.attr_col))
+        return cont(w)
+
+    def group(self, op: GroupOp, state, cont):
+        if op.entity is None:
+            return cont(self.sr.to_mask(state))
+        return cont(state)
+
+
+def compile_frontier(
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan
+) -> Callable[..., jnp.ndarray]:
+    phys = ensure_lowered(db, plan)
+    names = list(phys.param_names)
 
     @jax.jit
     def run(*args):
         params = dict(zip(names, args))
-        return _frontier_eval(db, plan, params)
+        return execute_ir(phys, lambda sr, um: _FrontierInterp(params, sr, um))
 
     return run
 
@@ -246,82 +309,102 @@ def compile_frontier(db: DeviceDB, plan: ChainPlan) -> Callable[..., jnp.ndarray
 # ---------------------------------------------------------------------------
 
 
-def compile_fragment_loop(db: DeviceDB, plan: ChainPlan) -> Callable[..., jnp.ndarray]:
-    """Nested fori_loops over fragments, scalar per-edge accumulator updates —
-    a direct port of the generated C++. Only SeedIds chains (SD/FSD/AS shapes);
-    mask seeds fall back to the frontier strategy."""
-    if not isinstance(plan.seed, SeedIds):
-        return compile_frontier(db, plan)
-    names = collect_params(plan)
-    hops = [s for s in plan.steps if isinstance(s, RelHop)]
-    esteps = {id(s): s for s in plan.steps}
-    dom_out = db.schema.domain_size(plan.group_entity or _last_entity(plan))
+class _FragmentLoopInterp(_Interp):
+    """Scalar state (cur_id, weight, ℛ): HopOps emit nested fori_loops over
+    one fragment at a time; GroupOp is a single scalar ⊕-update per completed
+    path — a direct port of the generated C++."""
 
+    def __init__(self, params, sr, use_measures=True, out_dom: int = 0):
+        super().__init__(params, sr, use_measures)
+        self.out_dom = out_dom
+
+    def seed(self, op: SeedOp, state, cont):
+        sr = self.sr
+        R = jnp.full(self.out_dom, sr.zero, jnp.float32)
+        if op.scalars:
+            self.capture_scalars(op, self.resolve(op.ids[0]))
+        for i in op.ids:  # static seed count: unrolled chain per seed id
+            sid = jnp.asarray(self.resolve(i), dtype=jnp.int32)
+            R = cont((sid, jnp.float32(sr.one), R))
+        return R
+
+    def hop(self, op: HopOp, state, cont):
+        cur, wgt, R = state
+        start = op.indptr[cur]
+        n = op.indptr[cur + 1] - start
+
+        def body(k, Rc):
+            e = start + k
+            w2 = wgt
+            if op.measure is not None and self.use_measures:
+                mval = eval_lexpr(
+                    op.measure, self.params, self.scalars, lambda c: c.array[e]
+                )
+                w2 = self.sr.extend(w2, mval)
+            return cont((op.dst_ids[e], w2, Rc))
+
+        return jax.lax.fori_loop(0, n, body, R)
+
+    def degree_filter(self, op: DegreeFilterOp, state, cont):
+        cur, wgt, R = state
+        return cont((cur, self.sr.select(op.degrees[cur] > 0, wgt), R))
+
+    def entity_filter(self, op: EntityFilterOp, state, cont):
+        cur, wgt, R = state
+        if op.factor is not None and self.use_measures:
+            f = eval_lexpr(
+                op.factor, self.params, self.scalars, lambda c: c.array[cur]
+            )
+            wgt = self.sr.extend(wgt, f)
+        keep = None
+        if op.const_mask is not None:
+            keep = op.const_mask[cur] > 0
+        for c in op.param_conds:
+            k = c.mask(self.params, lambda cc: cc.array[cur])
+            keep = k if keep is None else keep & k
+        if keep is not None:
+            wgt = self.sr.select(keep, wgt)
+        return cont((cur, wgt, R))
+
+    def group(self, op: GroupOp, state, cont):
+        cur, wgt, R = state
+        return cont(self.sr.scatter(R, cur, wgt))
+
+
+def compile_fragment_loop(
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan
+) -> Callable[..., jnp.ndarray]:
+    """Nested fori_loops over fragments, scalar per-edge accumulator updates.
+    Only id-seeded chains (SD/FSD/AS shapes); mask seeds and semijoins fall
+    back to the frontier strategy."""
+    phys = ensure_lowered(db, plan)
+    seed_op = phys.ops[0]
+    if seed_op.ids is None or any(
+        isinstance(op, HopOp) and op.semijoin for op in phys.ops
+    ):
+        return compile_frontier(db, phys)
+    names = list(phys.param_names)
+
+    @jax.jit
     def run(*args):
         params = dict(zip(names, args))
-        ids = plan.seed.ids if isinstance(plan.seed.ids, list) else [plan.seed.ids]
-        seed_id = jnp.asarray(_resolve(ids[0], params), dtype=jnp.int32)
+        return execute_ir(
+            phys,
+            lambda sr, um: _FragmentLoopInterp(params, sr, um, out_dom=phys.out_dom),
+        )
 
-        needed = set()
-        for s in plan.steps:
-            e = s.measure_expr if isinstance(s, RelHop) else s.factor_expr
-            if e is not None:
-                needed |= {(r.var, r.attr) for r in expr_refs(e)}
-        scalars = _seed_scalars(db, plan.seed, needed, params)
-
-        R0 = jnp.zeros(dom_out, dtype=jnp.float32)
-
-        def emit(step_i: int, cur_id, weight, R):
-            """Recursively emit the nested loop for steps[step_i:]."""
-            if step_i == len(plan.steps):
-                return R.at[cur_id].add(weight)
-            s = plan.steps[step_i]
-            if isinstance(s, EntityStep):
-                f = jnp.float32(1)
-                if s.factor_expr is not None:
-                    env = dict(scalars)
-                    for r in expr_refs(s.factor_expr):
-                        if r.var == s.var:
-                            env[(r.var, r.attr)] = db.entity_attrs[(s.entity, r.attr)][cur_id]
-                    f = eval_expr(s.factor_expr, env, params, jnp)
-                return emit(step_i + 1, cur_id, weight * f, R)
-            di = db.index(s.table, s.src_key)
-            start = di.indptr[cur_id]
-            n = di.indptr[cur_id + 1] - start
-
-            def body(k, Rc):
-                e = start + k
-                nxt = di.dst_ids[e]
-                wgt = weight
-                if s.measure_expr is not None:
-                    env = dict(scalars)
-                    for r in expr_refs(s.measure_expr):
-                        if r.var == s.var:
-                            env[(r.var, r.attr)] = di.measures[r.attr][e]
-                    wgt = wgt * eval_expr(s.measure_expr, env, params, jnp)
-                return emit(step_i + 1, nxt, wgt, Rc)
-
-            return jax.lax.fori_loop(0, n, body, R)
-
-        return emit(0, seed_id, jnp.float32(1), R0)
-
-    return jax.jit(run)
-
-
-def _last_entity(plan: ChainPlan) -> str:
-    hops = [s for s in plan.steps if isinstance(s, RelHop) and not s.degree_filter]
-    return hops[-1].dst_entity if hops else plan.seed.entity
+    return run
 
 
 # ---------------------------------------------------------------------------
-# Distributed (edge-sharded shard_map, one psum per hop)
+# Distributed (edge-sharded shard_map, one collective per hop)
 # ---------------------------------------------------------------------------
 
 
 def shard_edges(db: DeviceDB, mesh: Mesh, axes: tuple[str, ...]) -> DeviceDB:
     """Pad every index's edge arrays to a multiple of the shard count and place
-    them edge-sharded on ``axes``; padding edges carry measure 0 (⇒ no effect:
-    every hop multiplies by an explicit per-edge weight, ones for real edges)."""
+    them edge-sharded on ``axes``; padding edges carry ``__valid__`` 0 and are
+    masked to the semiring zero inside every hop."""
     nshards = int(np.prod([mesh.shape[a] for a in axes]))
     out: dict[tuple[str, str], DeviceIndex] = {}
     for key, di in db.indexes.items():
@@ -342,26 +425,86 @@ def shard_edges(db: DeviceDB, mesh: Mesh, axes: tuple[str, ...]) -> DeviceDB:
     return DeviceDB(db.schema, out, db.entity_attrs, db.host_indexes)
 
 
+class _DistributedInterp(_FrontierInterp):
+    """Frontier semantics with edge arrays drawn from the shard_map argument
+    trees and one ⊕-collective per hop (psum/pmin/pmax by semiring)."""
+
+    def __init__(self, params, sr, use_measures=True, *, edges=None, side=None,
+                 axes=("data",), frontier_dtype=jnp.float32):
+        super().__init__(params, sr, use_measures)
+        self.edges = edges
+        self.side = side
+        self.axes = axes
+        self.frontier_dtype = frontier_dtype
+
+    def spawn(self) -> "_DistributedInterp":
+        return _DistributedInterp(
+            self.params, BOOL_OR_AND, edges=self.edges, side=self.side,
+            axes=self.axes, frontier_dtype=self.frontier_dtype,
+        )
+
+    # column routing: shard_map arguments instead of lower-time closures
+    def col(self, c):
+        kind = c.key[0]
+        if kind == "edge":
+            _, table, key, attr = c.key
+            return self.edges[f"{table}::{key}"][f"m::{attr}"]
+        _, entity, attr = c.key
+        return self.side[f"attr::{entity}::{attr}"]
+
+    attr_col = col
+
+    def edge_arrays(self, op: HopOp):
+        e = self.edges[f"{op.table}::{op.src_key}"]
+        return e["src"], e["dst"], e["m::__valid__"]
+
+    def degrees(self, op: DegreeFilterOp):
+        return self.side[f"deg::{op.table}::{op.src_key}"]
+
+    def spmv(self, w, src, dst, m, valid, op: HopOp):
+        sr = self.sr
+        ew = sr.mask(sr.extend(jnp.take(w, src), m), valid)
+        part = sr.segment(ew, dst, op.dom_dst)
+        # frontier_dtype=bf16 halves every per-hop all-reduce
+        return sr.preduce(part.astype(self.frontier_dtype), self.axes).astype(
+            jnp.float32
+        )
+
+
+def _shard_map_fn():
+    try:
+        return jax.shard_map  # jax >= 0.5 style
+    except AttributeError:  # pragma: no cover
+        from jax.experimental.shard_map import shard_map
+
+        return shard_map
+
+
+def _shard_map_compat(fn, mesh, in_specs, out_specs):
+    shard_map = _shard_map_fn()
+    try:
+        return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_vma=False)
+    except TypeError:  # older jax spells the kwarg check_rep
+        return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                         check_rep=False)
+
+
 def compile_frontier_distributed(
-    db: DeviceDB, plan: ChainPlan, mesh: Mesh, axes: tuple[str, ...] = ("data",),
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan, mesh: Mesh,
+    axes: tuple[str, ...] = ("data",),
     batched: bool = False, frontier_dtype=jnp.float32,
 ) -> Callable[..., jnp.ndarray]:
     """shard_map execution: frontier vectors replicated, edges sharded; each hop
-    computes a local partial accumulator and psums it — the paper's parallel
+    computes a local partial accumulator and ⊕-reduces it — the paper's parallel
     design (§6 "Parallel Computing") with the collective replacing spinlocks.
 
     Edge arrays flow through shard_map *arguments* (in_specs=P(axes)) so each
     device sees only its shard; small arrays (indptr, degrees, entity attrs,
     frontier vectors) are closure constants, i.e. replicated.
     """
-    try:
-        from jax import shard_map as _shard_map_mod  # jax >= 0.5 style
-
-        shard_map = jax.shard_map
-    except AttributeError:  # pragma: no cover
-        from jax.experimental.shard_map import shard_map
-
-    names = collect_params(plan)
+    phys = ensure_lowered(db, plan)
+    names = list(phys.param_names)
     sdb = shard_edges(db, mesh, axes)
 
     edge_tree = {
@@ -382,93 +525,26 @@ def compile_frontier_distributed(
     side_specs = jax.tree.map(lambda _: P(), side_tree)
 
     def run(edges, side, *args):
-        import types
-
-        params = dict(zip(names, args))
-        view = types.SimpleNamespace(
-            schema=sdb.schema,
-            entity_attrs={
-                (e, a): side[f"attr::{e}::{a}"] for (e, a) in db.entity_attrs
-            },
-        )
-
-        def get(table: str, key: str, name: str):
-            return edges[f"{table}::{key}"][name]
-
-        def eval_chain(plan: ChainPlan) -> jnp.ndarray:
-            if isinstance(plan.seed, SeedIds):
-                dom = sdb.schema.domain_size(plan.seed.entity)
-                ids = plan.seed.ids if isinstance(plan.seed.ids, list) else [plan.seed.ids]
-                idx = jnp.asarray([_resolve(i, params) for i in ids], dtype=jnp.int32)
-                w = jnp.zeros(dom, dtype=jnp.float32).at[idx].add(1.0)
-                seed_src = plan.seed
-            else:
-                w = jnp.ones(sdb.schema.domain_size(plan.seed.entity), jnp.float32)
-                for chain in plan.seed.chains:
-                    w = w * eval_chain(chain)
-                if plan.seed.entity_conds:
-                    w = w * _cond_mask(view, plan.seed.entity, plan.seed.entity_conds, params)
-                seed_src = None
-            needed = set()
-            for s in plan.steps:
-                e = s.measure_expr if isinstance(s, RelHop) else s.factor_expr
-                if e is not None:
-                    needed |= {(r.var, r.attr) for r in expr_refs(e)}
-            scalars = _seed_scalars(view, seed_src, needed, params) if seed_src else {}
-            for s in plan.steps:
-                if isinstance(s, RelHop):
-                    if s.semijoin:
-                        w = (w > 0).astype(jnp.float32)
-                    if s.degree_filter:
-                        w = w * (side[f"deg::{s.table}::{s.src_key}"] > 0).astype(jnp.float32)
-                        continue
-                    ew = get(s.table, s.src_key, "m::__valid__")
-                    if s.measure_expr is not None:
-                        env = dict(scalars)
-                        for r in expr_refs(s.measure_expr):
-                            if r.var == s.var:
-                                env[(r.var, r.attr)] = get(s.table, s.src_key, f"m::{r.attr}")
-                        ew = ew * eval_expr(s.measure_expr, env, params, jnp)
-                    part = jax.ops.segment_sum(
-                        jnp.take(w, get(s.table, s.src_key, "src")) * ew,
-                        get(s.table, s.src_key, "dst"),
-                        num_segments=sdb.schema.domain_size(s.dst_entity),
-                    )
-                    # frontier_dtype=bf16 halves every per-hop all-reduce
-                    w = jax.lax.psum(part.astype(frontier_dtype), axes).astype(jnp.float32)
-                else:
-                    if s.factor_expr is not None:
-                        env = dict(scalars)
-                        for r in expr_refs(s.factor_expr):
-                            if r.var == s.var:
-                                env[(r.var, r.attr)] = view.entity_attrs[(s.entity, r.attr)]
-                        w = w * eval_expr(s.factor_expr, env, params, jnp).astype(jnp.float32)
-                    if s.conds:
-                        w = w * _cond_mask(view, s.entity, s.conds, params)
-            if plan.group_entity is None:
-                return (w > 0).astype(jnp.float32)
-            return w
+        def eval_once(*scalar_args):
+            params = dict(zip(names, scalar_args))
+            return execute_ir(
+                phys,
+                lambda sr, um: _DistributedInterp(
+                    params, sr, um, edges=edges, side=side, axes=axes,
+                    frontier_dtype=frontier_dtype,
+                ),
+            )
 
         if batched:
             # batched OLAP serving: vmap over parameter vectors inside the
             # shard_map body — frontier becomes [B, dom], hops become SpMM
-            def scalar_eval(*scalar_args):
-                nonlocal params
-                saved = params
-                params = dict(zip(names, scalar_args))
-                out = eval_chain(plan)
-                params = saved
-                return out
+            return jax.vmap(eval_once)(*args)
+        return eval_once(*args)
 
-            return jax.vmap(scalar_eval)(*args)
-        return eval_chain(plan)
-
-    smapped = shard_map(
-        run,
-        mesh=mesh,
+    smapped = _shard_map_compat(
+        run, mesh,
         in_specs=(edge_specs, side_specs) + tuple(P() for _ in names),
         out_specs=P(),
-        check_vma=False,
     )
     jitted = jax.jit(smapped)
 

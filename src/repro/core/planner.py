@@ -265,7 +265,8 @@ def _maybe_degree_filter(steps, out_ref: Ref, domain: str, out_entity: str,
 
 
 def _attach_factors(schema, vars, steps, seed_var, agg_item: SelectItem) -> None:
-    if agg_item.agg == "count" or agg_item.expr is None:
+    # COUNT(*) / EXISTS(*) carry no score expression: every path weighs 1̄
+    if agg_item.agg in ("count", "exists") or agg_item.expr is None:
         return
     factors = multiplicative_factors(agg_item.expr)
     for f, inverted in factors:

@@ -91,10 +91,10 @@ class NumpyQueryEngine:
             out[ids[w > 0]] = 1.0
             return out
         if self.agg == "dense":
-            return np.bincount(ids, weights=w, minlength=dom).astype(np.float64)
-        uniq, inv = np.unique(ids, return_inverse=True)  # hash-style grouping
-        acc = np.zeros(uniq.shape[0])
-        np.add.at(acc, inv, w)
+            return _gamma_dense(plan.agg, ids, w, dom)
+        # hash-style grouping: γ over the compact id set, scattered to dom
+        uniq, inv = np.unique(ids, return_inverse=True)
+        acc = _gamma_dense(plan.agg, inv, w, uniq.shape[0])
         out = np.zeros(dom)
         out[uniq] = acc
         return out
@@ -186,6 +186,25 @@ class NumpyQueryEngine:
             }[c.op]
             ids, w = ids[keep], w[keep]
         return ids, w
+
+
+def _gamma_dense(agg: str, ids: np.ndarray, w: np.ndarray, dom: int) -> np.ndarray:
+    """Dense γ over [0, dom) for every supported aggregate; empty groups
+    report 0 (the engine's output convention)."""
+    if agg in ("count", "sum"):
+        return np.bincount(ids, weights=w, minlength=dom).astype(np.float64)
+    if agg == "exists":
+        return (np.bincount(ids, minlength=dom) > 0).astype(np.float64)
+    if agg == "avg":
+        s = np.bincount(ids, weights=w, minlength=dom)
+        c = np.bincount(ids, minlength=dom)
+        return np.divide(s, c, out=np.zeros(dom), where=c > 0)
+    if agg in ("min", "max"):
+        ident = np.inf if agg == "min" else -np.inf
+        acc = np.full(dom, ident)
+        (np.minimum if agg == "min" else np.maximum).at(acc, ids, w)
+        return np.where(acc == ident, 0.0, acc)
+    raise ValueError(f"unsupported aggregate {agg}")
 
 
 def _res(v, params):

@@ -1,0 +1,140 @@
+"""Aggregation semirings for the dense γ accumulator (DESIGN.md §3).
+
+Every relationship query reduces, per group key, an aggregate over the set of
+join paths reaching that key; the per-path weight is the ⊗-product of the hop
+factors. A :class:`Semiring` packages the (⊕, ⊗, 0̄, 1̄) the executor needs so
+that SUM/COUNT, MIN/MAX and EXISTS all run through the *same* lowered-IR walker
+and the same kernels:
+
+  * ``sum``  — (+, ×, 0, 1): SUM/COUNT, the paper's γ accumulator.
+  * ``min``  — (min, ×, +∞, 1): MIN over path scores. Distributes over the hop
+    product only for non-negative factors (monotone extension) — the measure
+    columns of a GQ-Fast index are counts/frequencies, which satisfy this.
+  * ``max``  — (max, ×, −∞, 1): MAX, same monotonicity caveat.
+  * ``bool`` — (∨, ∧, 0, 1) on {0,1}: EXISTS / pure reachability; also the
+    algebra every IN-subquery mask chain runs under.
+
+AVG is not a semiring element of its own: the executor runs the ``sum``
+semiring twice inside one traced program — once weighted, once in count mode
+(measures suppressed) — and divides at finalize (the fused SUM+COUNT pair).
+
+The zero element 0̄ marks "no path reaches this entity". ⊗-extension guards it
+explicitly (``extend``) because +∞·0 would poison min/max lattices with NaNs,
+and predicate masks replace excluded entries by 0̄ (``mask``) instead of
+multiplying by 0, which is only correct for the sum semiring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class Semiring:
+    """The executor-facing contract; all arrays are float32 frontier vectors."""
+
+    name: str  # 'sum' | 'min' | 'max' | 'bool'
+    zero: float  # identity of ⊕ ("unreachable")
+    one: float = 1.0  # identity of ⊗ (seed weight)
+
+    # -- ⊕ ------------------------------------------------------------------
+    def combine(self, a, b):
+        if self.name == "sum":
+            return a + b
+        if self.name == "min":
+            return jnp.minimum(a, b)
+        return jnp.maximum(a, b)  # max | bool
+
+    def segment(self, vals, seg_ids, num_segments: int):
+        """Scatter-⊕ of per-edge values into the destination domain. The
+        segment identities (0 / +∞ / −∞) equal ``zero`` by construction."""
+        if self.name == "sum":
+            return jax.ops.segment_sum(vals, seg_ids, num_segments=num_segments)
+        if self.name == "min":
+            return jax.ops.segment_min(vals, seg_ids, num_segments=num_segments)
+        return jax.ops.segment_max(vals, seg_ids, num_segments=num_segments)
+
+    def preduce(self, x, axes):
+        """Cross-shard ⊕ (the distributed strategy's one collective per hop)."""
+        if self.name == "sum":
+            return jax.lax.psum(x, axes)
+        if self.name == "min":
+            return jax.lax.pmin(x, axes)
+        return jax.lax.pmax(x, axes)
+
+    # -- ⊗ ------------------------------------------------------------------
+    def extend(self, w, factor):
+        """w ⊗ factor with the 0̄ guard (0̄ absorbs: no path stays no path)."""
+        if self.name == "sum":
+            return w * factor
+        if self.name == "bool":
+            return jnp.where((w > 0) & (factor != 0), 1.0, 0.0)
+        return jnp.where(w == self.zero, self.zero, w * factor)
+
+    # -- structural ops ------------------------------------------------------
+    def mask(self, w, keep):
+        """Predicate filter: keep where ``keep`` (bool/0-1), else 0̄."""
+        return jnp.where(keep > 0, w, self.zero)
+
+    def from_mask(self, m):
+        """0/1 mask → frontier of 1̄/0̄ (seeding from an intersection mask)."""
+        return jnp.where(m > 0, self.one, self.zero)
+
+    def binarize(self, w):
+        """Semijoin ⋉: collapse path multiplicity to one path (paper §6.1)."""
+        if self.name == "sum":
+            return (w > 0).astype(jnp.float32)
+        return jnp.where(w != self.zero, self.one, self.zero)
+
+    def to_mask(self, w):
+        """Accumulator → 0/1 membership mask (mask-producing chains)."""
+        if self.name in ("sum", "bool"):
+            return (w > 0).astype(jnp.float32)
+        return (w != self.zero).astype(jnp.float32)
+
+    def finalize(self, w):
+        """Output convention: unreached groups report 0, not 0̄."""
+        if self.zero == 0.0:
+            return w
+        return jnp.where(w == self.zero, 0.0, w)
+
+    # -- scalar strategy hooks ----------------------------------------------
+    def scatter(self, acc, idx, val):
+        """Single-path ⊕-update of the dense accumulator (fragment-at-a-time
+        strategy: one scalar update per completed path, paper Fig. 3)."""
+        if self.name == "sum":
+            return acc.at[idx].add(val)
+        if self.name == "min":
+            return acc.at[idx].min(val)
+        return acc.at[idx].max(val)
+
+    def select(self, keep, w):
+        """Scalar weight filter: ``w`` if keep else 0̄ (a 0̄-weighted path is
+        discarded by ``scatter`` since 0̄ is the ⊕ identity... except for sum,
+        where adding 0 is equally a no-op)."""
+        return jnp.where(keep, w, self.zero)
+
+
+SUM_PRODUCT = Semiring("sum", zero=0.0)
+MIN_PRODUCT = Semiring("min", zero=float("inf"))
+MAX_PRODUCT = Semiring("max", zero=float("-inf"))
+BOOL_OR_AND = Semiring("bool", zero=0.0)
+
+SEMIRINGS = {
+    "sum": SUM_PRODUCT,
+    "count": SUM_PRODUCT,
+    "avg": SUM_PRODUCT,  # fused SUM+COUNT pair, divided at finalize
+    "min": MIN_PRODUCT,
+    "max": MAX_PRODUCT,
+    "exists": BOOL_OR_AND,
+    None: BOOL_OR_AND,  # mask-producing plans are reachability queries
+}
+
+
+def semiring_for(agg: str | None) -> Semiring:
+    try:
+        return SEMIRINGS[agg]
+    except KeyError:
+        raise ValueError(f"no semiring registered for aggregate {agg!r}") from None

@@ -1,11 +1,19 @@
 """SQL subset parser for relationship queries (paper §4).
 
-Supports exactly the relationship-query surface: SELECT with plain key columns and
-COUNT(*)/SUM(expr) aggregates (arithmetic over measure/entity attributes, abs),
-FROM with JOIN..ON chains (arbitrarily parenthesized) or comma lists, WHERE
-conjunctions of key-equality join conditions / constant predicates / IN
-(sub-relationship-query) with INTERSECT chains, GROUP BY on a single key.
-Parameters are written ``:name`` (prepare once, execute many — paper §3).
+Supports exactly the relationship-query surface: SELECT with plain key columns
+and COUNT(*)/EXISTS(*)/SUM(expr)/MIN(expr)/MAX(expr)/AVG(expr) aggregates
+(arithmetic over measure/entity attributes, abs), FROM with JOIN..ON chains
+(arbitrarily parenthesized) or comma lists, WHERE conjunctions of key-equality
+join conditions / constant predicates / IN (sub-relationship-query) with
+INTERSECT chains, GROUP BY on a single key. Parameters are written ``:name``
+(prepare once, execute many — paper §3).
+
+The aggregate chooses the execution semiring (DESIGN.md §3): SUM/COUNT run the
+classic (+, ×) accumulator, MIN/MAX the (min/max, ×) lattices, EXISTS(*) pure
+boolean reachability, and AVG a fused SUM+COUNT pair. Like the paper's
+``SUM(e1)/e2 ≡ SUM(e1/e2)`` per-path convention (Fig. 3), arithmetic around an
+aggregate call distributes into it — exact for SUM/AVG, and for MIN/MAX under
+the engine's non-negative-factor contract.
 """
 from __future__ import annotations
 
@@ -33,7 +41,8 @@ _TOKEN_RE = re.compile(
 
 _KEYWORDS = {
     "select", "from", "where", "join", "on", "group", "by", "in",
-    "intersect", "and", "count", "sum", "abs", "as",
+    "intersect", "and", "count", "sum", "min", "max", "avg", "exists",
+    "abs", "as",
 }
 
 
@@ -106,19 +115,21 @@ class _Parser:
         return Query(select, tables, join_conds, const_conds, group_by)
 
     def parse_select_item(self) -> SelectItem:
-        # COUNT(*) | plain ref | expression containing SUM(...)
-        if self.peek() == ("kw", "count"):
-            self.next()
-            self.expect("op", "(")
-            self.expect("op", "*")
-            self.expect("op", ")")
-            return SelectItem(expr=None, ref=None, agg="count")
+        # COUNT(*) / EXISTS(*) | plain ref | expression containing an
+        # aggregate call SUM/MIN/MAX/AVG(...)
+        for star_agg in ("count", "exists"):
+            if self.peek() == ("kw", star_agg):
+                self.next()
+                self.expect("op", "(")
+                self.expect("op", "*")
+                self.expect("op", ")")
+                return SelectItem(expr=None, ref=None, agg=star_agg)
         start = self.i
         expr = self.parse_expr()
-        if isinstance(expr, Ref) and not self._expr_has_sum_flag:
+        if isinstance(expr, Ref) and self._expr_agg is None:
             return SelectItem(expr=None, ref=expr, agg=None)
-        if self._expr_has_sum_flag:
-            return SelectItem(expr=expr, ref=None, agg="sum")
+        if self._expr_agg is not None:
+            return SelectItem(expr=expr, ref=None, agg=self._expr_agg)
         self.i = start
         raise SyntaxError(f"unsupported select item at token {self.toks[start]}")
 
@@ -213,10 +224,10 @@ class _Parser:
         raise SyntaxError(f"expected qualified ref, got bare {name}")
 
     # -- expressions --------------------------------------------------------
-    _expr_has_sum_flag = False
+    _expr_agg: str | None = None  # aggregate kind seen inside the expression
 
     def parse_expr(self) -> Expr:
-        self._expr_has_sum_flag = False
+        self._expr_agg = None
         return self._add()
 
     def _add(self) -> Expr:
@@ -241,13 +252,20 @@ class _Parser:
 
     def _atom(self) -> Expr:
         t = self.peek()
-        if t == ("kw", "sum"):
+        if t[0] == "kw" and t[1] in ("sum", "min", "max", "avg"):
             self.next()
             self.expect("op", "(")
             inner = self._add()
             self.expect("op", ")")
-            self._expr_has_sum_flag = True
-            return inner  # SUM(e1)/e2 ≡ SUM(e1/e2): per-path accumulation (Fig. 3)
+            if self._expr_agg is not None:
+                # AGG(a)+AGG(b) would silently merge into AGG(a+b); that
+                # identity holds for SUM only, not MIN/MAX/AVG — reject all
+                raise SyntaxError(
+                    f"multiple aggregate calls ({self._expr_agg}, {t[1]}) "
+                    "in one select item"
+                )
+            self._expr_agg = t[1]
+            return inner  # AGG(e1)/e2 ≡ AGG(e1/e2): per-path accumulation (Fig. 3)
         if t == ("kw", "abs"):
             self.next()
             self.expect("op", "(")

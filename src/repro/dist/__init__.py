@@ -1,0 +1,3 @@
+"""Distribution utilities: sharding-spec derivation for the config families
+(:mod:`repro.dist.sharding`) and compressed collectives
+(:mod:`repro.dist.compression`)."""

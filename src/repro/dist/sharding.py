@@ -1,0 +1,183 @@
+"""Sharding-spec derivation for the arch-config families (DESIGN.md §6).
+
+One rule table per family maps parameter/batch leaf *names* to PartitionSpecs
+on the production mesh axes — ``pod`` (DCN data parallel), ``data`` (FSDP) and
+``model`` (tensor parallel). Every spec goes through :func:`_filter` before it
+touches a NamedSharding, which (a) drops axis names the current mesh doesn't
+have and (b) drops an axis whenever it doesn't divide the dimension — so the
+same rule table serves the 1-device smoke tests, the 256-chip pod and the
+512-chip multi-pod mesh (same degrade-gracefully contract as
+``models.common.shard_hint``).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+FSDP = ("pod", "data")  # fully-sharded data-parallel axes
+EDGE = ("data", "model")  # flat edge/candidate axes (counts padded to 512)
+
+
+def _filter(mesh, spec, shape=None):
+    """Adapt a PartitionSpec to ``mesh``: drop absent axis names, collapse
+    single-axis tuples, and (when ``shape`` is given) drop any axis whose
+    total size doesn't divide the dimension."""
+    names = set(mesh.axis_names)
+    sizes = dict(zip(mesh.axis_names, (mesh.shape[a] for a in mesh.axis_names)))
+    out = []
+    for i, s in enumerate(spec):
+        if s is None:
+            out.append(None)
+            continue
+        axes = tuple(a for a in ((s,) if isinstance(s, str) else s) if a in names)
+        if not axes:
+            out.append(None)
+            continue
+        n = 1
+        for a in axes:
+            n *= sizes[a]
+        if shape is not None and shape[i] % n != 0:
+            out.append(None)
+            continue
+        out.append(axes[0] if len(axes) == 1 else axes)
+    return P(*out)
+
+
+def named(mesh, spec, shape=None) -> NamedSharding:
+    return NamedSharding(mesh, _filter(mesh, spec, shape))
+
+
+def replicated(tree, mesh):
+    return jax.tree.map(lambda _: named(mesh, P()), tree)
+
+
+def _leaf_name(path) -> str:
+    """Last dict key on a tree path (param name; moments mirror the params,
+    so 'm'/'v' wrappers and tuple indices are skipped by taking the last)."""
+    name = ""
+    for k in path:
+        if hasattr(k, "key"):
+            name = str(k.key)
+    return name
+
+
+def _shard_by_name(tree, mesh, spec_fn):
+    def one(path, leaf):
+        spec = spec_fn(_leaf_name(path), leaf.shape)
+        full = tuple(spec) + (None,) * (len(leaf.shape) - len(spec))
+        return named(mesh, P(*full[: len(leaf.shape)]), leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(one, tree)
+
+
+# ---------------------------------------------------------------------------
+# LM family
+# ---------------------------------------------------------------------------
+
+# name → spec over the *parameter* dims; layer-stacked leaves carry a leading
+# (L, …) dim which is never sharded (scan carries over it)
+_LM_RULES = {
+    # attention: FSDP on d_model, tensor parallel on (kv-)heads
+    "wq": (None, FSDP, "model", None),
+    "wk": (None, FSDP, "model", None),
+    "wv": (None, FSDP, "model", None),
+    "wo": (None, "model", None, FSDP),
+    "bq": (None, "model", None),
+    "bk": (None, "model", None),
+    "bv": (None, "model", None),
+    # dense mlp: tensor parallel on d_ff
+    "w_gate": (None, FSDP, "model"),
+    "w_up": (None, FSDP, "model"),
+    "w_down": (None, "model", FSDP),
+    # MoE: experts over model, FSDP inside the expert
+    "router": (None, FSDP, None),
+    "e_gate": (None, "model", FSDP, None),
+    "e_up": (None, "model", FSDP, None),
+    "e_down": (None, "model", None, FSDP),
+    # embeddings / head: vocab over FSDP, model over d
+    "embed": (FSDP, "model"),
+    "lm_head": (FSDP, "model"),
+    # norms
+    "ln1": (None, FSDP),
+    "ln2": (None, FSDP),
+    "ln_f": (FSDP,),
+    # int8-blocked optimizer moments ([nb, 256] + per-block scales)
+    "q": (EDGE, None),
+    "s": (EDGE,),
+}
+
+
+def lm_param_spec(path: str, shape, mesh, n_kv_heads: int = 1) -> P:
+    """Unfiltered spec for one LM parameter; ``path`` is '/'-joined tree keys.
+    ``n_kv_heads`` documents the head-dim divisibility contract — the actual
+    check happens in :func:`_filter` against the concrete shape."""
+    name = path.split("/")[-1]
+    spec = _LM_RULES.get(name, (None,) * len(shape))
+    full = tuple(spec) + (None,) * (len(shape) - len(spec))
+    return P(*full[: len(shape)])
+
+
+def lm_state_shardings(tree, mesh, n_kv_heads: int = 1):
+    """Shardings for params or (params, opt) trees: moments mirror the param
+    layout (leaf names repeat under 'm'/'v'); scalars replicate."""
+    return _shard_by_name(
+        tree, mesh, lambda name, shape: lm_param_spec(name, shape, mesh, n_kv_heads)
+    )
+
+
+def lm_batch_shardings(tree, mesh):
+    """Token batches: batch dim over (pod, data), sequence dim replicated."""
+    return _shard_by_name(tree, mesh, lambda name, shape: (FSDP,))
+
+
+def kv_cache_shardings(cache, mesh, n_kv_heads: int = 1):
+    """KV cache [L, B, S, H_kv, hd]: batch over (pod, data), heads over model
+    (dropped by the filter when model ∤ H_kv — the GQA small-head case)."""
+    return _shard_by_name(
+        tree=cache, mesh=mesh,
+        spec_fn=lambda name, shape: (None, FSDP, None, "model", None),
+    )
+
+
+# ---------------------------------------------------------------------------
+# GNN family
+# ---------------------------------------------------------------------------
+
+
+def gnn_input_shardings(batch, mesh):
+    """Edge arrays (padded to 512) shard over data×model; node/graph arrays
+    over data when divisible, else replicate (the filter decides)."""
+    return _shard_by_name(
+        batch, mesh,
+        lambda name, shape: (EDGE,) if name.startswith("edge_") else (("data",),),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Recsys family
+# ---------------------------------------------------------------------------
+
+
+def recsys_state_shardings(tree, mesh):
+    """Embedding tables row-sharded over model (the big-vocab lever); the tiny
+    MLP towers and their moments replicate."""
+
+    def spec(name, shape):
+        if name.endswith("_emb"):
+            return ("model", None)
+        if name == "q":
+            return (EDGE, None)
+        if name == "s":
+            return (EDGE,)
+        return ()
+
+    return _shard_by_name(tree, mesh, spec)
+
+
+def recsys_batch_shardings(batch, mesh):
+    """Request batches over (pod, data); the flat retrieval candidate array
+    (padded to 512) over data×model."""
+    return _shard_by_name(
+        batch, mesh,
+        lambda name, shape: (EDGE,) if name == "cand_items" else (FSDP,),
+    )

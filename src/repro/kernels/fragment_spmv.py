@@ -1,18 +1,23 @@
 """Pallas TPU kernel: fused fragment join-aggregate (one relationship hop).
 
-y[dst] += w[src] · m over the edge list of a GQ-Fast index — the frontier SpMV
-that every ⋈/⋉+γ hop lowers to (DESIGN.md §4). The frontier vector ``w`` and the
-dense accumulator ``y`` live in VMEM for the whole pass (entity domains up to a
-few M fit v5e's 16 MB VMEM in fp32 tiles); the edge arrays stream through in
-blocks. The output BlockSpec maps every grid step to the same block — the
-canonical Pallas accumulate-over-grid pattern — so the scatter-add stays on-chip
-instead of bouncing to HBM per block (the paper's "spinlocked shared array",
-contention-free).
+y[dst] ⊕= w[src] ⊗ m over the edge list of a GQ-Fast index — the frontier SpMV
+that every ⋈/⋉+γ hop lowers to (DESIGN.md §4). The combine op ⊕ is a parameter
+(``op``: 'sum' | 'min' | 'max' | 'bool'), matching the executor's semiring
+plug-in point, so SUM/COUNT, MIN/MAX and EXISTS hops all run through this one
+kernel. The frontier vector ``w`` and the dense accumulator ``y`` live in VMEM
+for the whole pass (entity domains up to a few M fit v5e's 16 MB VMEM in fp32
+tiles); the edge arrays stream through in blocks. The output BlockSpec maps
+every grid step to the same block — the canonical Pallas accumulate-over-grid
+pattern — so the scatter-⊕ stays on-chip instead of bouncing to HBM per block
+(the paper's "spinlocked shared array", contention-free).
 
-Gather (jnp.take) and scatter-add (segment_sum) inside the body lower to Mosaic
-dynamic-gather / scatter-add; on TPU generations without scatter support,
+Gather (jnp.take) and scatter-⊕ (segment_sum/min/max) inside the body lower to
+Mosaic dynamic-gather / scatter; on TPU generations without scatter support,
 ``ops.fragment_spmv`` falls back to the pure-XLA path (same math, same layout).
 Edges arrive sorted by src (CSR order) which makes the gather quasi-sequential.
+
+Padding edges point src past the frontier so the gather fills the ⊕-identity,
+and carry measure 0 — under every op they contribute the identity.
 """
 from __future__ import annotations
 
@@ -24,40 +29,76 @@ from jax.experimental import pallas as pl
 
 EDGE_BLOCK = 4096
 
+# ⊕-identity per combine op ("no path reaches this entity")
+IDENTITY = {
+    "sum": 0.0,
+    "min": float("inf"),
+    "max": float("-inf"),
+    "bool": 0.0,
+}
 
-def _kernel(n_dst: int, w_ref, src_ref, dst_ref, m_ref, out_ref):
+
+def _edge_product(w, src, m, op: str):
+    """w[src] ⊗ m with the identity guard non-sum lattices need (∞·0 = NaN)."""
+    zero = IDENTITY[op]
+    ws = jnp.take(w, src, fill_value=zero)
+    if op == "sum":
+        return ws * m
+    if op == "bool":
+        return ((ws > 0) & (m != 0)).astype(jnp.float32)
+    return jnp.where(ws == zero, zero, ws * m)
+
+
+def _segment_combine(prod, dst, n_dst: int, op: str):
+    if op == "sum":
+        return jax.ops.segment_sum(prod, dst, num_segments=n_dst)
+    if op == "min":
+        return jax.ops.segment_min(prod, dst, num_segments=n_dst)
+    return jax.ops.segment_max(prod, dst, num_segments=n_dst)  # max | bool
+
+
+def _combine(a, b, op: str):
+    if op == "sum":
+        return a + b
+    if op == "min":
+        return jnp.minimum(a, b)
+    return jnp.maximum(a, b)
+
+
+def _kernel(n_dst: int, op: str, w_ref, src_ref, dst_ref, m_ref, out_ref):
     @pl.when(pl.program_id(0) == 0)
     def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
 
-    w = w_ref[...]
-    src = src_ref[...]
-    dst = dst_ref[...]
-    m = m_ref[...]
-    prod = jnp.take(w, src, fill_value=0.0) * m
-    out_ref[...] += jax.ops.segment_sum(prod, dst, num_segments=n_dst)
+    prod = _edge_product(w_ref[...], src_ref[...], m_ref[...], op)
+    blk = _segment_combine(prod, dst_ref[...], n_dst, op)
+    out_ref[...] = _combine(out_ref[...], blk, op)
 
 
-@functools.partial(jax.jit, static_argnames=("n_dst", "interpret"))
+@functools.partial(jax.jit, static_argnames=("n_dst", "op", "interpret"))
 def fragment_spmv(
     weights: jnp.ndarray,
     src_ids: jnp.ndarray,
     dst_ids: jnp.ndarray,
     measures: jnp.ndarray,
     n_dst: int,
+    op: str = "sum",
     interpret: bool = False,
 ) -> jnp.ndarray:
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
     E = src_ids.shape[0]
     pad = (-E) % EDGE_BLOCK
     if pad:
-        # padding edges: src points past the frontier (gather fill 0), measure 0
+        # padding edges: src points past the frontier (gather fills the
+        # ⊕-identity), measure 0 ⇒ identity contribution under every op
         src_ids = jnp.concatenate([src_ids, jnp.full(pad, weights.shape[0], jnp.int32)])
         dst_ids = jnp.concatenate([dst_ids, jnp.zeros(pad, jnp.int32)])
         measures = jnp.concatenate([measures, jnp.zeros(pad, jnp.float32)])
     n_blocks = max(1, (E + pad) // EDGE_BLOCK)
 
     return pl.pallas_call(
-        functools.partial(_kernel, n_dst),
+        functools.partial(_kernel, n_dst, op),
         grid=(n_blocks,),
         in_specs=[
             pl.BlockSpec(weights.shape, lambda i: (0,)),  # frontier resident

@@ -26,14 +26,15 @@ def bitunpack(packed, width: int, count: int, use_pallas: bool = True):
     return _bitunpack(jnp.asarray(packed, jnp.uint32), width, count, interpret=_interpret())
 
 
-def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int, use_pallas: bool = True):
+def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int,
+                  op: str = "sum", use_pallas: bool = True):
     w = jnp.asarray(weights, jnp.float32)
     s = jnp.asarray(src_ids, jnp.int32)
     d = jnp.asarray(dst_ids, jnp.int32)
     m = jnp.asarray(measures, jnp.float32)
     if not use_pallas:
-        return ref.fragment_spmv_ref(w, s, d, m, n_dst)
-    return _fragment_spmv(w, s, d, m, n_dst, interpret=_interpret())
+        return ref.fragment_spmv_ref(w, s, d, m, n_dst, op=op)
+    return _fragment_spmv(w, s, d, m, n_dst, op=op, interpret=_interpret())
 
 
 def bitmap_and(a, b, use_pallas: bool = True):

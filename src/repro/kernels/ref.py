@@ -36,10 +36,20 @@ def fragment_spmv_ref(
     dst_ids: jnp.ndarray,  # i32[E]
     measures: jnp.ndarray,  # f32[E]
     n_dst: int,
+    op: str = "sum",
 ) -> jnp.ndarray:
-    """One relationship hop: y[dst] = Σ_edges w[src] · m (the frontier SpMV)."""
-    ew = jnp.take(weights, src_ids) * measures
-    return jax.ops.segment_sum(ew, dst_ids, num_segments=n_dst)
+    """One relationship hop: y[dst] = ⊕_edges w[src] ⊗ m (the frontier SpMV),
+    with the combine op ⊕ selected by the aggregation semiring."""
+    ws = jnp.take(weights, src_ids)
+    if op == "sum":
+        return jax.ops.segment_sum(ws * measures, dst_ids, num_segments=n_dst)
+    if op == "bool":
+        ew = ((ws > 0) & (measures != 0)).astype(jnp.float32)
+        return jax.ops.segment_max(ew, dst_ids, num_segments=n_dst)
+    zero = float("inf") if op == "min" else float("-inf")
+    ew = jnp.where(ws == zero, zero, ws * measures)  # ∞·0 guard
+    seg = jax.ops.segment_min if op == "min" else jax.ops.segment_max
+    return seg(ew, dst_ids, num_segments=n_dst)
 
 
 def bitmap_and_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -1,5 +1,34 @@
-"""Production meshes (importing this module never touches jax device state)."""
+"""Production meshes (importing this module never touches jax device state).
+
+Also the jax-version compatibility shim for mesh construction: ``axis_types``
+/ ``jax.sharding.AxisType`` only exist on newer jax; :func:`make_mesh` and
+:func:`_mesh_from_devices` request Auto axes when available and degrade to the
+plain constructor otherwise, so tests and benchmarks build meshes the same way
+everywhere."""
 from __future__ import annotations
+
+
+def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
+    """``jax.make_mesh(shape, axes, axis_types=Auto…)`` across jax versions."""
+    import jax
+
+    try:
+        return jax.make_mesh(
+            shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        return jax.make_mesh(shape, axes)
+
+
+def _mesh_from_devices(devices, axes: tuple[str, ...]):
+    import jax
+
+    try:
+        return jax.sharding.Mesh(
+            devices, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
+        )
+    except (AttributeError, TypeError):
+        return jax.sharding.Mesh(devices, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -20,10 +49,7 @@ def make_production_mesh(*, multi_pod: bool = False):
         )
     import numpy as np
 
-    return jax.sharding.Mesh(
-        np.asarray(devices).reshape(shape), axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
-    )
+    return _mesh_from_devices(np.asarray(devices).reshape(shape), axes)
 
 
 def make_local_mesh(axes: tuple[str, ...] = ("data",), shape: tuple[int, ...] | None = None):
@@ -34,6 +60,4 @@ def make_local_mesh(axes: tuple[str, ...] = ("data",), shape: tuple[int, ...] | 
     n = len(jax.devices())
     shape = shape or (n,)
     devices = np.asarray(jax.devices()[: int(np.prod(shape))]).reshape(shape)
-    return jax.sharding.Mesh(
-        devices, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return _mesh_from_devices(devices, axes)

@@ -1,0 +1,147 @@
+"""Semiring aggregate correctness: MIN/MAX/AVG/EXISTS (and the SUM/COUNT
+baselines) against the materializing numpy oracle, under both the frontier and
+the fragment-at-a-time strategies (DESIGN.md §3)."""
+import numpy as np
+import pytest
+
+from repro.core.engine import GQFastDatabase, GQFastEngine
+from repro.core.reference import run_sql
+from repro.data import synth_graph as SG
+
+# two-hop SD-shaped chain with a per-path score
+Q_SCORE = """
+SELECT dt2.Doc, {agg}(dt1.Fre * dt2.Fre)
+FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+WHERE dt1.Doc = :d0
+GROUP BY dt2.Doc
+"""
+
+Q_EXISTS = """
+SELECT dt2.Doc, EXISTS(*)
+FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+WHERE dt1.Doc = :d0
+GROUP BY dt2.Doc
+"""
+
+# mask-seeded (IN-INTERSECT) FAD-shaped chain
+Q_FAD = """
+SELECT dt2.Term, {agg}(dt2.Fre)
+FROM DT dt2
+WHERE dt2.Doc IN
+  (SELECT dt.Doc FROM DT dt WHERE dt.Term = :t1)
+  INTERSECT
+  (SELECT dt.Doc FROM DT dt WHERE dt.Term = :t2)
+GROUP BY dt2.Term
+"""
+
+
+@pytest.fixture(scope="module")
+def pubmed():
+    return SG.make_pubmed(n_docs=800, n_terms=60, n_authors=250, seed=2)
+
+
+@pytest.fixture(scope="module")
+def db(pubmed):
+    return GQFastDatabase(pubmed, account_space=False)
+
+
+@pytest.fixture(scope="module", params=["frontier", "fragment_loop"])
+def engine(request, db):
+    return GQFastEngine(db, strategy=request.param)
+
+
+@pytest.mark.parametrize("agg", ["SUM", "MIN", "MAX", "AVG"])
+def test_score_aggregates_match_reference(engine, pubmed, agg):
+    q = Q_SCORE.format(agg=agg)
+    got = engine.query(q, d0=5)
+    ref = run_sql(pubmed, q, {"d0": 5})
+    assert got.shape == ref.shape
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+    assert (got != 0).sum() > 0, "degenerate test: empty result"
+
+
+def test_exists_matches_reference(engine, pubmed):
+    got = engine.query(Q_EXISTS, d0=5)
+    ref = run_sql(pubmed, Q_EXISTS, {"d0": 5})
+    np.testing.assert_allclose(got, ref)
+    assert set(np.unique(got)) <= {0.0, 1.0}
+    # EXISTS is COUNT collapsed to membership
+    cnt = engine.query(Q_SCORE.format(agg="SUM").replace("SUM(dt1.Fre * dt2.Fre)", "COUNT(*)"), d0=5)
+    np.testing.assert_allclose(got, (cnt > 0).astype(float))
+
+
+@pytest.mark.parametrize("agg", ["MIN", "MAX", "AVG"])
+def test_mask_seeded_aggregates(engine, pubmed, agg):
+    q = Q_FAD.format(agg=agg)
+    got = engine.query(q, t1=3, t2=9)
+    ref = run_sql(pubmed, q, {"t1": 3, "t2": 9})
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+    assert (got != 0).sum() > 0
+
+
+def test_min_max_bracket_avg(engine):
+    mn = engine.query(Q_SCORE.format(agg="MIN"), d0=5)
+    mx = engine.query(Q_SCORE.format(agg="MAX"), d0=5)
+    av = engine.query(Q_SCORE.format(agg="AVG"), d0=5)
+    reached = mx > 0
+    assert reached.any()
+    assert (mn[reached] <= av[reached] + 1e-4).all()
+    assert (av[reached] <= mx[reached] + 1e-4).all()
+
+
+def test_avg_equals_sum_over_count(engine, pubmed):
+    av = engine.query(Q_SCORE.format(agg="AVG"), d0=5)
+    s = engine.query(Q_SCORE.format(agg="SUM"), d0=5)
+    c = run_sql(pubmed, Q_SCORE.format(agg="SUM").replace(
+        "SUM(dt1.Fre * dt2.Fre)", "COUNT(*)"), {"d0": 5})
+    expect = np.divide(s, c, out=np.zeros_like(s), where=c > 0)
+    np.testing.assert_allclose(av, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_prepared_aggregate_many_params(db, pubmed):
+    eng = GQFastEngine(db)
+    pq = eng.prepare(Q_SCORE.format(agg="MIN"))
+    for d0 in (3, 5, 11):
+        np.testing.assert_allclose(
+            pq(d0=d0), run_sql(pubmed, Q_SCORE.format(agg="MIN"), {"d0": d0}),
+            rtol=1e-4, atol=1e-4,
+        )
+
+
+def test_duplicate_seed_ids_accumulate(db, pubmed):
+    """Two seed params resolving to the same id must double path multiplicity
+    under the sum semiring (scatter-⊕ seeding, not set)."""
+    q = """SELECT dt2.Doc, COUNT(*)
+           FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+           WHERE dt1.Doc = :x AND dt1.Doc = :y
+           GROUP BY dt2.Doc"""
+    for strat in ("frontier", "fragment_loop"):
+        eng = GQFastEngine(db, strategy=strat)
+        got = eng.query(q, x=5, y=5)
+        ref = run_sql(pubmed, q, {"x": 5, "y": 5})
+        np.testing.assert_allclose(got, ref)
+        single = eng.query(Q_SCORE.format(agg="SUM").replace(
+            "SUM(dt1.Fre * dt2.Fre)", "COUNT(*)"), d0=5)
+        np.testing.assert_allclose(got, 2 * single)
+
+
+def test_rejects_multiple_aggregate_calls():
+    """MIN(a)+MIN(b) must not silently merge into MIN(a+b)."""
+    from repro.core.sql import parse
+
+    for expr in ("MIN(dt1.Fre) + MIN(dt2.Fre)", "SUM(dt1.Fre) + MIN(dt2.Fre)",
+                 "SUM(dt1.Fre) * SUM(dt2.Fre)"):
+        with pytest.raises(SyntaxError):
+            parse(f"""SELECT dt2.Doc, {expr}
+                      FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+                      WHERE dt1.Doc = 1 GROUP BY dt2.Doc""")
+
+
+def test_strategies_agree_on_aggregates(db):
+    f = GQFastEngine(db, strategy="frontier")
+    l = GQFastEngine(db, strategy="fragment_loop")
+    for agg in ("MIN", "MAX", "AVG"):
+        q = Q_SCORE.format(agg=agg)
+        np.testing.assert_allclose(
+            f.query(q, d0=7), l.query(q, d0=7), rtol=1e-4, atol=1e-4
+        )

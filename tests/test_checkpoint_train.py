@@ -68,7 +68,9 @@ def test_restore_resharding_elastic(tmp):
     mgr = CheckpointManager(tmp, keep=1)
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     mgr.save(1, tree)
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     restored, _ = mgr.restore(tree, shardings=sh)
     np.testing.assert_array_equal(np.asarray(restored["w"]), np.asarray(tree["w"]))

@@ -1,6 +1,7 @@
 """Codec roundtrips (hypothesis property tests), space model, Fig.-12 chooser."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import codecs as C

@@ -16,8 +16,9 @@ from repro.roofline.analysis import (
 
 
 def _tiny_mesh():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+
+    return make_mesh((1, 1), ("data", "model"))
 
 
 def test_registry_covers_assignment():

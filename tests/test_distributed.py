@@ -37,7 +37,8 @@ def test_query_engine_8dev_matches_single():
         schema = make_pubmed(n_docs=500, n_terms=50, n_authors=200)
         db = GQFastDatabase(schema, account_space=False)
         base = GQFastEngine(db)
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         dist = GQFastEngine(db, mesh=mesh)
         for q, p in [(QUERY_AS, {"a0": 7}), (QUERY_AD, {"t1": 3, "t2": 9}),
                      (QUERY_FSD, {"d0": 5})]:
@@ -60,8 +61,8 @@ def test_batched_distributed_query():
         schema = make_pubmed(n_docs=400, n_terms=40, n_authors=150)
         db = GQFastDatabase(schema, account_space=False)
         base = GQFastEngine(db)
-        mesh = jax.make_mesh((4, 2), ("data", "model"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((4, 2), ("data", "model"))
         plan = plan_query(schema, parse(QUERY_AS))
         fb = X.compile_frontier_distributed(db.device, plan, mesh,
                                             ("data", "model"), batched=True)
@@ -79,14 +80,19 @@ def test_sharded_embedding_lookup_8dev():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.models.embedding import sharded_embedding_lookup, mod_shard_table
-        mesh = jax.make_mesh((8,), ("model",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("model",))
         rng = np.random.default_rng(0)
         V, D, ns = 1003, 16, 8
         tbl = rng.normal(size=(V, D)).astype(np.float32)
         sh = jnp.asarray(mod_shard_table(tbl, ns))
         ids = jnp.asarray(rng.integers(0, V, 64).astype(np.int32))
         sharded = jax.device_put(sh, jax.sharding.NamedSharding(mesh, P("model", None, None)))
-        f = jax.jit(jax.shard_map(
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+        f = jax.jit(shard_map(
             lambda t, i: sharded_embedding_lookup(t.reshape(-1, D), i, ns),
             mesh=mesh, in_specs=(P("model", None, None), P()), out_specs=P()))
         out = np.asarray(f(sharded, ids))
@@ -104,7 +110,8 @@ def test_compressed_psum_8dev():
         import numpy as np, jax, jax.numpy as jnp
         from jax.sharding import PartitionSpec as P
         from repro.dist.compression import compressed_psum
-        mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+        from repro.launch.mesh import make_mesh
+        mesh = make_mesh((8,), ("data",))
         rng = np.random.default_rng(0)
         gl = rng.normal(size=(8, 256)).astype(np.float32)  # per-device grads
         g_sh = jax.device_put(jnp.asarray(gl), jax.sharding.NamedSharding(mesh, P("data", None)))
@@ -113,7 +120,11 @@ def test_compressed_psum_8dev():
             m, er = compressed_psum(g[0], e[0], "data")
             return m, er[None]
 
-        f = jax.jit(jax.shard_map(
+        try:
+            shard_map = jax.shard_map
+        except AttributeError:
+            from jax.experimental.shard_map import shard_map
+        f = jax.jit(shard_map(
             body, mesh=mesh, in_specs=(P("data", None), P("data", None)),
             out_specs=(P(), P("data", None))))
 
@@ -143,7 +154,9 @@ def test_shard_hint_noop_without_mesh():
 def test_spec_filtering_on_small_mesh():
     from repro.dist.sharding import _filter, lm_param_spec
 
-    mesh = jax.make_mesh((1,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     # 'model' axis absent → dropped by the mesh filter; divisibility by the
     # 1-sized 'data' axis always holds
     spec = _filter(mesh, lm_param_spec("layers/wq", (2, 64, 4, 16), mesh, n_kv_heads=2))

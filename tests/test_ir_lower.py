@@ -1,0 +1,155 @@
+"""Lowering golden tests: each benchmark query shape compiles to a known
+physical-op sequence, with ref resolution / seed-scalar capture / constant
+condition masks done at lower time (DESIGN.md §2)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import GQFastDatabase
+from repro.core.lower import (
+    EntityFilterOp,
+    GroupOp,
+    HopOp,
+    LCol,
+    LParam,
+    SeedOp,
+    lower,
+)
+from repro.core.planner import plan_query
+from repro.core.sql import parse
+from repro.data import synth_graph as SG
+
+
+@pytest.fixture(scope="module")
+def db():
+    return GQFastDatabase(
+        SG.make_pubmed(n_docs=300, n_terms=40, n_authors=100), account_space=False
+    )
+
+
+def _lower(db, sql):
+    return lower(db.device, plan_query(db.schema, parse(sql)))
+
+
+def test_sd_signature(db):
+    phys = _lower(db, SG.QUERY_SD)
+    assert phys.op_signature() == [
+        "Seed(Document, ids)",
+        "Hop(DT.Doc->Term)",
+        "Hop(DT.Term->Document)",
+        "Group(Document)",
+    ]
+    assert phys.agg == "count" and phys.param_names == ("d0",)
+
+
+def test_fsd_signature_and_seed_scalars(db):
+    phys = _lower(db, SG.QUERY_FSD)
+    assert phys.op_signature() == [
+        "Seed(Document, ids)",
+        "Hop(DT.Doc->Term;measure)",
+        "Hop(DT.Term->Document;measure)",
+        "EntityFilter(Document;factor)",
+        "Group(Document)",
+    ]
+    seed = phys.ops[0]
+    # d1.Year referenced downstream → captured as a seed-scalar column
+    assert ("d1", "Year") in seed.scalars
+    assert seed.scalars[("d1", "Year")].array.shape[0] == db.schema.domain_size(
+        "Document"
+    )
+
+
+def test_as_signature(db):
+    phys = _lower(db, SG.QUERY_AS)
+    assert phys.op_signature() == [
+        "Seed(Author, ids)",
+        "Hop(DA.Author->Document)",
+        "Hop(DT.Doc->Term;measure)",
+        "Hop(DT.Term->Document;measure)",
+        "EntityFilter(Document;factor)",
+        "Hop(DA.Doc->Author)",
+        "Group(Author)",
+    ]
+    assert phys.agg == "sum" and phys.out_dom == db.schema.domain_size("Author")
+
+
+def test_ad_mask_seed_and_semijoin(db):
+    phys = _lower(db, SG.QUERY_AD)
+    assert phys.op_signature() == [
+        "Seed(Document, mask[2])",
+        "Hop(DA.Doc->Author;semijoin)",
+        "Group(Author)",
+    ]
+    seed = phys.ops[0]
+    # each IN-INTERSECT chain lowers to its own mask-producing sub-program
+    for prog in seed.programs:
+        assert prog.agg is None
+        assert prog.op_signature()[-1] == "Group(None)"
+
+
+def test_recent_authors_degree_filter_and_param_conds(db):
+    phys = _lower(db, SG.QUERY_RECENT_AUTHORS)
+    assert phys.op_signature() == [
+        "Seed(Document, mask[2])",
+        "Hop(DA.Doc->Author;semijoin)",
+        "Group(None)",
+    ]
+    seed = phys.ops[0]
+    # Year > :y is parameter-dependent → stays a residual LCond row
+    assert len(seed.param_conds) == 1
+    assert seed.param_conds[0].op == ">" and isinstance(
+        seed.param_conds[0].value, LParam
+    )
+    # the third chain projects da.Doc → its sub-program ends in a degree filter
+    sigs = [p.op_signature() for p in seed.programs]
+    assert any("DegreeFilter(DA.Doc)" in s for s in sigs)
+
+
+def test_const_conds_prebuilt_at_lower_time(db):
+    # constant predicate → a concrete 0/1 mask baked into the op, no residue
+    sql = """SELECT da.Author, COUNT(*) FROM DA da WHERE da.Doc IN
+             (SELECT d.ID FROM Document d WHERE d.Year > 2000)
+             GROUP BY da.Author"""
+    phys = _lower(db, sql)
+    seed = phys.ops[0]
+    assert seed.param_conds == () and seed.const_mask is not None
+    year = db.schema.entities["Document"].attributes["Year"]
+    np.testing.assert_array_equal(
+        np.asarray(seed.const_mask), (year > 2000).astype(np.float32)
+    )
+
+
+def test_measure_refs_bound_to_columns(db):
+    phys = _lower(db, SG.QUERY_FSD)
+    hop = next(op for op in phys.ops if isinstance(op, HopOp) and op.measure)
+    cols = []
+
+    def walk(e):
+        if isinstance(e, LCol):
+            cols.append(e)
+        for attr in ("left", "right"):
+            if hasattr(e, attr):
+                walk(getattr(e, attr))
+        for a in getattr(e, "args", ()):
+            walk(a)
+
+    walk(hop.measure)
+    assert cols, "hop measure must reference at least one bound column"
+    for c in cols:
+        assert c.key[0] == "edge" and isinstance(c.array, jnp.ndarray)
+        assert c.array.shape[0] == hop.src_ids.shape[0]
+
+
+def test_agg_threading(db):
+    for agg in ("MIN", "MAX", "AVG"):
+        sql = f"""SELECT dt2.Doc, {agg}(dt1.Fre * dt2.Fre)
+                  FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+                  WHERE dt1.Doc = :d0 GROUP BY dt2.Doc"""
+        assert _lower(db, sql).agg == agg.lower()
+    sql = """SELECT dt2.Doc, EXISTS(*)
+             FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+             WHERE dt1.Doc = :d0 GROUP BY dt2.Doc"""
+    phys = _lower(db, sql)
+    assert phys.agg == "exists"
+    # EXISTS(*) carries no score expression: hops stay measure-free
+    assert all(op.measure is None for op in phys.ops if isinstance(op, HopOp))

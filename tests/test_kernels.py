@@ -2,6 +2,7 @@
 oracles in kernels/ref.py, plus hypothesis property tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp

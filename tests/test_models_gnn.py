@@ -2,6 +2,7 @@
 rotations), model rotation invariance, permutation invariance, shapes."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -1,6 +1,7 @@
 """DIN + embedding substrate tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis", reason="property tests need the [test] extra")
 from hypothesis import given, settings, strategies as st
 
 import jax
