@@ -19,8 +19,19 @@ def timeit(fn, *args, warmup: int = 1, iters: int = 3, **kw) -> float:
     return float(np.median(ts))
 
 
-def emit(name: str, us_per_call: float, derived: str = "") -> None:
+# structured record sink mirroring the CSV stream — benchmarks/run.py drains
+# it into BENCH_<suite>.json artifacts for the CI perf trajectory
+RECORDS: list[dict] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
+    """Print one CSV row and record it (plus any structured ``extra`` fields,
+    e.g. ``device_bytes=...``) for the JSON artifact."""
     print(f"{name},{us_per_call:.1f},{derived}")
+    RECORDS.append(
+        {"name": name, "us_per_call": round(float(us_per_call), 1),
+         "derived": derived, **extra}
+    )
 
 
 @functools.lru_cache(maxsize=None)

@@ -10,16 +10,40 @@ import numpy as np
 
 from repro.core.engine import GQFastDatabase, GQFastEngine
 from repro.data import synth_graph as SG
+from repro.storage import device_space_report
 
 from .common import emit, timeit
 
 
 def run() -> None:
     schema = SG.make_pubmed(n_docs=8_000, n_terms=400, n_authors=2_000, seed=21)
-    db = GQFastDatabase(schema, account_space=False)
+    db = GQFastDatabase(schema, account_space=False)  # auto → packed device store
+    db_dense = GQFastDatabase(schema, account_space=False, device_encodings="dense")
     frontier = GQFastEngine(db, strategy="frontier")
     floop = GQFastEngine(db, strategy="fragment_loop")
     auto = GQFastEngine(db, strategy="auto")
+
+    # §Storage: decode-fused packed storage vs the decoded-CSR baseline —
+    # device bytes drop while the frontier hot path stays bit-identical
+    sp = device_space_report(db.device)
+    sd = device_space_report(db_dense.device)
+    dense_eng = GQFastEngine(db_dense, strategy="frontier")
+    for qname, sql, params in [
+        ("SD", SG.QUERY_SD, {"d0": 11}),
+        ("AS", SG.QUERY_AS, {"a0": 17}),
+    ]:
+        pp, pd = frontier.prepare(sql), dense_eng.prepare(sql)
+        identical = bool(np.array_equal(pp(**params), pd(**params)))
+        t_p = timeit(lambda: np.asarray(pp(**params)), iters=5)
+        t_d = timeit(lambda: np.asarray(pd(**params)), iters=5)
+        emit(
+            f"perf/{qname}/frontier_packed", t_p * 1e6,
+            f"vs_decoded={t_p/t_d:.2f} bit_identical={identical} "
+            f"space_ratio={sp['dense_bytes']/sp['total_bytes']:.2f}",
+            device_bytes=sp["total_bytes"],
+            decoded_device_bytes=sd["total_bytes"],
+        )
+
     for qname, sql, params in [
         ("SD", SG.QUERY_SD, {"d0": 11}),
         ("AS", SG.QUERY_AS, {"a0": 17}),

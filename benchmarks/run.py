@@ -2,11 +2,28 @@
 """Benchmark harness: python -m benchmarks.run [table3 table4 ...]
 
 Each module reproduces one paper table/figure (DESIGN.md §8); the roofline
-summary reads the dry-run artifacts (EXPERIMENTS.md §Roofline)."""
+summary reads the dry-run artifacts (EXPERIMENTS.md §Roofline). Besides the
+CSV stream, every suite writes an ``artifacts/bench/BENCH_<suite>.json``
+artifact (name, us_per_call, derived + structured fields such as device
+bytes) — the machine-readable perf trajectory CI accumulates per commit."""
 from __future__ import annotations
 
+import json
+import os
 import sys
 import time
+
+ARTIFACT_DIR = os.path.join("artifacts", "bench")
+
+
+def _write_artifact(suite: str, records: list[dict], seconds: float,
+                    error: str | None) -> None:
+    os.makedirs(ARTIFACT_DIR, exist_ok=True)
+    payload = {"suite": suite, "seconds": round(seconds, 1), "records": records}
+    if error:
+        payload["error"] = error
+    with open(os.path.join(ARTIFACT_DIR, f"BENCH_{suite}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
 
 
 def main() -> None:
@@ -31,15 +48,23 @@ def main() -> None:
         "fig15": fig15_parallel.run,
         "perf": perf_baseline.run,
     }
+    from .common import RECORDS
+
     picked = sys.argv[1:] or list(suites)
+    failed = []
     print("name,us_per_call,derived")
     for name in picked:
         t0 = time.time()
+        start, err = len(RECORDS), None
         try:
             suites[name]()
         except Exception as e:  # noqa: BLE001
-            print(f"{name}/ERROR,0,{type(e).__name__}: {e}")
-        print(f"# {name} done in {time.time()-t0:.1f}s", file=sys.stderr)
+            err = f"{type(e).__name__}: {e}"
+            failed.append(name)
+            print(f"{name}/ERROR,0,{err}")
+        dt = time.time() - t0
+        _write_artifact(name, RECORDS[start:], dt, err)
+        print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     # roofline summary (if dry-run artifacts exist)
     try:
         from repro.roofline.analysis import load_records, roofline_from_record
@@ -54,6 +79,9 @@ def main() -> None:
             )
     except Exception as e:  # noqa: BLE001
         print(f"roofline/ERROR,0,{e}")
+    if failed:
+        # every suite still ran and wrote its artifact, but CI must go red
+        sys.exit(f"suites failed: {', '.join(failed)}")
 
 
 if __name__ == "__main__":

@@ -21,14 +21,27 @@ from .sql import parse
 
 
 class GQFastDatabase:
-    """In-memory GQ-Fast database: both directions of every relationship table."""
+    """In-memory GQ-Fast database: both directions of every relationship table.
+
+    ``keep_packed`` (default True, matching ``fragments.build_index``) keeps
+    the host-side bit-packed words on each ``ColumnFragments`` — the kernel
+    wire layout the device column store reuses. Setting it False only trades
+    host memory for a re-pack when a packed device encoding is chosen; the
+    device representation is governed solely by ``device_encodings``
+    (``"auto"`` | ``"dense"`` | ``"packed"`` | per-column dict keyed by
+    ``(table, key, column)`` — see ``executor.build_device_db``). Deployments
+    that only run the fallback strategies (``fragment_loop`` / a mesh) should
+    pass ``device_encodings="dense"``: their prepares materialize every packed
+    column anyway, so packed storage would cost packed *plus* dense bytes
+    (visible as ``space_report()["device"]["materialized_bytes"]``)."""
 
     def __init__(
         self,
         schema: Schema,
         encodings: dict[tuple[str, str, str], str] | None = None,
         account_space: bool = True,
-        keep_packed: bool = False,
+        keep_packed: bool = True,
+        device_encodings: str | dict | None = "auto",
     ):
         schema.validate()
         self.schema = schema
@@ -44,9 +57,14 @@ class GQFastDatabase:
                     schema, rel, key, enc or None,
                     keep_packed=keep_packed, account_space=account_space,
                 )
-        self.device = X.build_device_db(schema, self.host_indexes, keep_packed)
+        self.device = X.build_device_db(schema, self.host_indexes, device_encodings)
 
     def space_report(self) -> dict[str, Any]:
+        """Host byte-array accounting (paper §5 analytic model) plus the
+        ``device`` section: real bytes the device column store holds, per
+        column, with the decoded-CSR baseline for the compression ratio."""
+        from ..storage import device_space_report
+
         rep: dict[str, Any] = {"indexes": {}, "total_bytes": 0}
         for (t, k), idx in self.host_indexes.items():
             cols = {
@@ -56,6 +74,7 @@ class GQFastDatabase:
             b = idx.total_bytes()
             rep["indexes"][f"I_{t}.{k}"] = {"columns": cols, "lookup_bytes": idx.lookup_bytes(), "bytes": b}
             rep["total_bytes"] += b
+        rep["device"] = device_space_report(self.device)
         return rep
 
 

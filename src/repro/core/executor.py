@@ -7,9 +7,13 @@ primitive each op maps to:
 
   * ``frontier`` — bottom-up fully pipelined execution, TPU-native: each HopOp
     dispatches through :func:`repro.kernels.ops.fragment_spmv` (Pallas on TPU,
-    interpret/XLA fallback on CPU) over dense per-entity-domain vectors. JAX
-    tracing fuses the whole plan into one XLA executable; intermediates are
-    vectors, never materialized join tables.
+    interpret/XLA fallback on CPU) over dense per-entity-domain vectors, or —
+    when the index's columns are stored bit-packed by the device column store
+    (:mod:`repro.storage`) — through the decode-fused
+    :func:`repro.kernels.ops.fragment_spmv_packed`, which unpacks dst ids and
+    measures block-at-a-time in VMEM (the paper's compression-inside-the-
+    operator design). JAX tracing fuses the whole plan into one XLA
+    executable; intermediates are vectors, never materialized join tables.
   * ``fragment_loop`` — paper-faithful port of the generated C++ (Fig. 3):
     nested ``lax.fori_loop``s walk one fragment at a time, scalar accumulator
     updates. The §Perf baseline demonstrating why the vectorized rewrite is
@@ -25,6 +29,7 @@ All strategies return the dense γ accumulator ℛ over the group-by entity doma
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 from dataclasses import dataclass, field
 from typing import Any, Callable
@@ -34,6 +39,15 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..storage import (
+    DenseColumn,
+    DeviceColumn,
+    DictPackedColumn,
+    PackedColumn,
+    build_device_column,
+    column_uniques,
+    resolve_device_encoding,
+)
 from .algebra import ChainPlan, EntityStep, Param, RelHop, SeedIds
 from .fragments import FragmentIndex
 from .lower import (
@@ -41,6 +55,9 @@ from .lower import (
     EntityFilterOp,
     GroupOp,
     HopOp,
+    LBin,
+    LCall,
+    LCol,
     LParam,
     PhysicalPlan,
     SeedOp,
@@ -53,14 +70,26 @@ from .semiring import BOOL_OR_AND, Semiring, semiring_for
 
 @dataclass
 class DeviceIndex:
-    """Device-resident form of one FragmentIndex (CSR + expanded COO)."""
+    """Device-resident form of one FragmentIndex: CSR structure arrays plus
+    the co-stored columns as :class:`repro.storage.DeviceColumn`s, so whether
+    a column lives decoded (int32/float32 CSR) or bit-packed (BCA words /
+    dictionary-packed) is a per-column physical property. ``dst_ids`` /
+    ``measures`` decode on demand — the compatibility surface for consumers
+    without a packed path (free when the column is dense)."""
 
     indptr: jnp.ndarray  # int32[h+1]
     src_ids: jnp.ndarray  # int32[E]  (CSR row ids expanded; sorted)
-    dst_ids: jnp.ndarray  # int32[E]
-    measures: dict[str, jnp.ndarray] = field(default_factory=dict)  # float32[E]
+    dst_col: DeviceColumn  # int32[E] decoded view
     degrees: jnp.ndarray | None = None
-    packed: dict[str, tuple[jnp.ndarray, int]] = field(default_factory=dict)
+    measure_cols: dict[str, DeviceColumn] = field(default_factory=dict)
+
+    @property
+    def dst_ids(self) -> jnp.ndarray:
+        return self.dst_col.materialize()
+
+    @property
+    def measures(self) -> dict[str, jnp.ndarray]:
+        return {m: c.materialize() for m, c in self.measure_cols.items()}
 
 
 @dataclass
@@ -77,24 +106,49 @@ class DeviceDB:
 def build_device_db(
     schema: Schema,
     host_indexes: dict[tuple[str, str], FragmentIndex],
-    keep_packed: bool = False,
+    device_encodings: str | dict | None = "auto",
 ) -> DeviceDB:
+    """Ship every fragment index to device under the storage policy.
+
+    ``device_encodings``: ``"auto"`` (§5-style chooser, the default) |
+    ``"dense"`` (decoded-CSR baseline) | ``"packed"`` (force BCA wherever it
+    fits) | a per-column dict ``{(table, key, column): encoding}`` with
+    ``"auto"`` filling unspecified columns. Every key of a per-column dict
+    must name a real (table, key, column) address — a typo'd override would
+    otherwise be silently ignored."""
     dev: dict[tuple[str, str], DeviceIndex] = {}
+    seen_addrs: set[tuple[str, str, str]] = set()
     for (table, key), idx in host_indexes.items():
         other = next(c for c in idx.columns if c != key and _is_fk(schema, table, c))
+        cf = idx.columns[other]
+        seen_addrs.add((table, key, other))
+        enc = resolve_device_encoding(
+            device_encodings, (table, key, other), cf.values, cf.domain, is_key=True
+        )
         di = DeviceIndex(
             indptr=jnp.asarray(idx.indptr, dtype=jnp.int32),
             src_ids=jnp.asarray(idx.src_ids(), dtype=jnp.int32),
-            dst_ids=jnp.asarray(idx.columns[other].values, dtype=jnp.int32),
+            dst_col=build_device_column(cf, enc, jnp.int32),
             degrees=jnp.asarray(np.diff(idx.indptr), dtype=jnp.int32),
         )
         for m, cf in idx.columns.items():
             if m == other:
                 continue
-            di.measures[m] = jnp.asarray(cf.values, dtype=jnp.float32)
-            if keep_packed and cf.packed is not None:
-                di.packed[m] = (jnp.asarray(cf.packed), cf.packed_width)
+            seen_addrs.add((table, key, m))
+            uq = column_uniques(cf.values)  # one scan shared by chooser+builder
+            enc = resolve_device_encoding(
+                device_encodings, (table, key, m), cf.values, cf.domain,
+                is_key=False, uniques=uq,
+            )
+            di.measure_cols[m] = build_device_column(cf, enc, jnp.float32, uniques=uq)
         dev[(table, key)] = di
+    if isinstance(device_encodings, dict):
+        unknown = set(device_encodings) - seen_addrs
+        if unknown:
+            raise ValueError(
+                f"device_encodings keys match no index column: {sorted(unknown)}; "
+                f"valid addresses: {sorted(seen_addrs)}"
+            )
     attrs = {
         (e.name, a): jnp.asarray(col, dtype=jnp.float32)
         for e in schema.entities.values()
@@ -141,6 +195,44 @@ def collect_params(plan: ChainPlan) -> list[str]:
 
 def ensure_lowered(db: DeviceDB, plan: ChainPlan | PhysicalPlan) -> PhysicalPlan:
     return plan if isinstance(plan, PhysicalPlan) else lower(db, plan)
+
+
+def densify_plan(phys: PhysicalPlan) -> PhysicalPlan:
+    """Materialize every packed column bound in the IR, once, producing an
+    all-dense twin of the plan. The correctness fallback for strategies with
+    no packed execution path (DESIGN.md §Storage): fragment_loop's scalar
+    loops index columns element-wise, so they pay one whole-column decode per
+    prepare here instead of a decode per loop iteration inside the trace."""
+
+    def dcol(col: DeviceColumn) -> DeviceColumn:
+        return col if isinstance(col, DenseColumn) else DenseColumn(col.materialize())
+
+    def dexpr(e):
+        if isinstance(e, LCol) and not isinstance(e.col, DenseColumn):
+            return LCol(e.key, dcol(e.col))
+        if isinstance(e, LBin):
+            return LBin(e.op, dexpr(e.left), dexpr(e.right))
+        if isinstance(e, LCall):
+            return LCall(e.fn, tuple(dexpr(a) for a in e.args))
+        return e
+
+    new_ops = []
+    for op in phys.ops:
+        if isinstance(op, HopOp):
+            op = dataclasses.replace(
+                op, dst_col=dcol(op.dst_col),
+                measure=dexpr(op.measure) if op.measure is not None else None,
+            )
+        elif isinstance(op, SeedOp) and op.programs:
+            op = dataclasses.replace(
+                op, programs=tuple(densify_plan(p) for p in op.programs)
+            )
+        elif isinstance(op, EntityFilterOp) and op.factor is not None:
+            op = dataclasses.replace(op, factor=dexpr(op.factor))
+        new_ops.append(op)
+    return PhysicalPlan(
+        tuple(new_ops), phys.param_names, phys.agg, phys.out_dom, phys.source
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -250,6 +342,9 @@ class _FrontierInterp(_Interp):
         sr, w = self.sr, state
         if op.semijoin:
             w = sr.binarize(w)
+        fused = self.spmv_fused(w, op)
+        if fused is not None:
+            return cont(fused)
         src, dst, valid = self.edge_arrays(op)
         E = src.shape[0]
         if op.measure is not None and self.use_measures:
@@ -261,6 +356,46 @@ class _FrontierInterp(_Interp):
 
     def edge_arrays(self, op: HopOp):
         return op.src_ids, op.dst_ids, None
+
+    def spmv_fused(self, w, op: HopOp):
+        """Decode-fused hop: stream packed columns straight into the kernel
+        (the paper's compression-inside-the-operator design). Engaged when the
+        dst column is bit-packed and/or the measure is a single packed column;
+        returns None when there is nothing to fuse (all-dense hop) and the
+        plain kernel path runs instead."""
+        from ..kernels import ops as K
+
+        dst_col = op.dst_col
+        dst_packed = isinstance(dst_col, PackedColumn)
+        m = op.measure if self.use_measures else None
+        if m is None:
+            m_mode, m_operand, m_width, mdict = "none", None, 0, None
+        elif isinstance(m, LCol) and isinstance(m.col, PackedColumn):
+            m_mode, m_operand, m_width, mdict = "packed", m.col.words, m.col.width, None
+        elif isinstance(m, LCol) and isinstance(m.col, DictPackedColumn):
+            m_mode, m_operand, m_width, mdict = (
+                "dict", m.col.words, m.col.width, m.col.dictionary,
+            )
+        else:
+            m_mode, m_operand, m_width, mdict = "dense", None, 0, None
+        if not (dst_packed or m_mode in ("packed", "dict")):
+            return None
+        if m_mode == "dense":
+            # complex measure expression over a packed index: evaluate it
+            # (decoding any packed LCols it references) and stream it dense;
+            # dst still decodes in VMEM
+            mv = eval_lexpr(m, self.params, self.scalars, self.col)
+            m_operand = jnp.broadcast_to(
+                jnp.asarray(mv, jnp.float32), (op.src_ids.shape[0],)
+            )
+        return K.fragment_spmv_packed(
+            w, op.src_ids,
+            dst_col.words if dst_packed else dst_col.materialize(),
+            m_operand, mdict,
+            n_dst=op.dom_dst,
+            dst_width=dst_col.width if dst_packed else 0,
+            m_mode=m_mode, m_width=m_width, op=self.sr.name,
+        )
 
     def spmv(self, w, src, dst, m, valid, op: HopOp):
         from ..kernels import ops as K
@@ -383,6 +518,7 @@ def compile_fragment_loop(
         isinstance(op, HopOp) and op.semijoin for op in phys.ops
     ):
         return compile_frontier(db, phys)
+    phys = densify_plan(phys)  # scalar loops have no packed path (§Storage)
     names = list(phys.param_names)
 
     @jax.jit
@@ -413,14 +549,20 @@ def shard_edges(db: DeviceDB, mesh: Mesh, axes: tuple[str, ...]) -> DeviceDB:
         ew = jnp.concatenate([jnp.ones(E, jnp.float32), jnp.zeros(pad, jnp.float32)])
         pd = lambda a, fill: jnp.concatenate([a, jnp.full(pad, fill, a.dtype)])
         sharding = NamedSharding(mesh, P(axes))
+        # materialize per shard: packed columns decode once here (eagerly, at
+        # shard-placement time) — the distributed strategy's documented
+        # fallback; its shard trees are always dense
         nd = DeviceIndex(
             indptr=di.indptr,
             src_ids=jax.device_put(pd(di.src_ids, 0), sharding),
-            dst_ids=jax.device_put(pd(di.dst_ids, 0), sharding),
+            dst_col=DenseColumn(jax.device_put(pd(di.dst_ids, 0), sharding)),
             degrees=di.degrees,
         )
-        nd.measures = {m: jax.device_put(pd(v, 0), sharding) for m, v in di.measures.items()}
-        nd.measures["__valid__"] = jax.device_put(ew, sharding)
+        nd.measure_cols = {
+            m: DenseColumn(jax.device_put(pd(v, 0), sharding))
+            for m, v in di.measures.items()
+        }
+        nd.measure_cols["__valid__"] = DenseColumn(jax.device_put(ew, sharding))
         out[key] = nd
     return DeviceDB(db.schema, out, db.entity_attrs, db.host_indexes)
 
@@ -453,6 +595,11 @@ class _DistributedInterp(_FrontierInterp):
         return self.side[f"attr::{entity}::{attr}"]
 
     attr_col = col
+
+    def spmv_fused(self, w, op: HopOp):
+        # edge data comes from the shard_map argument trees (always dense, see
+        # shard_edges), never from the lower-time column bindings
+        return None
 
     def edge_arrays(self, op: HopOp):
         e = self.edges[f"{op.table}::{op.src_key}"]

@@ -80,7 +80,12 @@ def build_index(
     keep_packed: bool = True,
     account_space: bool = True,
 ) -> FragmentIndex:
-    """Build I_{R.key}. ``encodings`` overrides the Fig.-12 chooser per column."""
+    """Build I_{R.key}. ``encodings`` overrides the Fig.-12 chooser per column.
+
+    ``keep_packed=True`` is the repo-wide default (``GQFastDatabase`` threads
+    the same value): the bit-packed words are the device column store's wire
+    layout, so keeping them costs host memory only and saves a re-pack when
+    the storage policy ships a column packed (storage/policy.py)."""
     other = rel.other_fk(key)
     kcol = rel.columns[key].astype(np.int64)
     ocol = rel.columns[other].astype(np.int64)

@@ -29,6 +29,7 @@ from typing import Any, Union
 
 import jax.numpy as jnp
 
+from ..storage import DenseColumn
 from .algebra import (
     BinOp,
     Call,
@@ -66,10 +67,20 @@ class LCol:
 
     ``key`` is the symbolic address — ``('edge', table, src_key, attr)`` or
     ``('attr', entity, attr)`` — used by the distributed strategy to fetch the
-    same column from its shard_map argument trees instead of the closure."""
+    same column from its shard_map argument trees instead of the closure.
+
+    ``col`` is the bound :class:`repro.storage.DeviceColumn`: per-edge measures
+    inherit the index's device encoding (dense / packed / dict-packed), entity
+    attributes are always dense. The frontier strategy inspects ``col`` to fuse
+    single-column packed measures into the hop kernel; every other consumer
+    reads ``array``, which decodes on demand (free for dense columns)."""
 
     key: tuple
-    array: Any  # jnp.ndarray
+    col: Any  # repro.storage.DeviceColumn
+
+    @property
+    def array(self):
+        return self.col.materialize()
 
 
 @dataclass(eq=False)
@@ -162,7 +173,12 @@ class SeedOp:
 
 @dataclass(eq=False)
 class HopOp:
-    """One ⋈/⋉ through I_{table.src_key}: gather ⊗ measure → scatter-⊕."""
+    """One ⋈/⋉ through I_{table.src_key}: gather ⊗ measure → scatter-⊕.
+
+    ``dst_col`` is the index's device dst column (any
+    :class:`repro.storage.DeviceColumn` kind); the frontier strategy streams
+    packed words straight into the decode-fused kernel, and ``dst_ids``
+    decodes on demand for strategies without a packed path."""
 
     table: str
     src_key: str
@@ -170,9 +186,13 @@ class HopOp:
     dom_dst: int
     indptr: Any
     src_ids: Any
-    dst_ids: Any
+    dst_col: Any  # repro.storage.DeviceColumn
     measure: LExpr | None = None
     semijoin: bool = False
+
+    @property
+    def dst_ids(self):
+        return self.dst_col.materialize()
 
 
 @dataclass(eq=False)
@@ -267,7 +287,7 @@ def lower(db, plan: ChainPlan) -> PhysicalPlan:
             ops.append(HopOp(
                 s.table, s.src_key, s.dst_entity,
                 db.schema.domain_size(s.dst_entity),
-                di.indptr, di.src_ids, di.dst_ids,
+                di.indptr, di.src_ids, di.dst_col,
                 measure=measure, semijoin=s.semijoin,
             ))
         else:  # EntityStep
@@ -344,11 +364,11 @@ def _lower_expr(db, e: Expr, step, plan: ChainPlan) -> LExpr:
                 di = db.index(step.table, step.src_key)
                 return LCol(
                     ("edge", step.table, step.src_key, e.attr),
-                    di.measures[e.attr],
+                    di.measure_cols[e.attr],
                 )
             return LCol(
                 ("attr", step.entity, e.attr),
-                db.entity_attrs[(step.entity, e.attr)],
+                DenseColumn(db.entity_attrs[(step.entity, e.attr)]),
             )
         seed = plan.seed
         if isinstance(seed, SeedIds) and e.var == seed.var:

@@ -27,15 +27,19 @@ GROUPS_PER_BLOCK = 32  # 1024 values per grid step
 BLOCK_VALUES = GROUP * GROUPS_PER_BLOCK
 
 
-def _kernel(width: int, packed_ref, out_ref):
+def decode_groups(words: jnp.ndarray, width: int) -> jnp.ndarray:
+    """In-kernel group decode: (G, width) uint32 words → (G, GROUP) int32 values.
+
+    Every row holds GROUP consecutive values (GROUP·width bits = width words)
+    with a *fixed* intra-group bit-offset pattern, so the two word operands per
+    output column are static column selects. Shared by the standalone
+    ``bitunpack`` kernel and the decode-fused SpMV (`fragment_spmv_packed`)."""
     # static per-column patterns for one 32-value group
     j = np.arange(GROUP)
     bit0 = j * width
     w_lo = (bit0 // 32).astype(np.int32)  # word holding the low bits
-    off = (bit0 % 32).astype(np.uint32)
     w_hi = np.minimum(w_lo + 1, width - 1)
 
-    words = packed_ref[...]  # (GROUPS_PER_BLOCK, width) uint32
     # unrolled static column selects (no dynamic gather on TPU)
     lo = jnp.stack([words[:, int(c)] for c in w_lo], axis=1)  # (G, 32)
     hi = jnp.stack([words[:, int(c)] for c in w_hi], axis=1)
@@ -47,7 +51,11 @@ def _kernel(width: int, packed_ref, out_ref):
     straddle = jnp.where(offv == 0, jnp.uint32(0), hi << shl)
     word = jnp.where(offv == 0, lo, (lo >> offv) | straddle)
     mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
-    out_ref[...] = (word & mask).astype(jnp.int32)
+    return (word & mask).astype(jnp.int32)
+
+
+def _kernel(width: int, packed_ref, out_ref):
+    out_ref[...] = decode_groups(packed_ref[...], width)
 
 
 @functools.partial(jax.jit, static_argnames=("width", "count", "interpret"))

@@ -88,6 +88,8 @@ def fragment_spmv(
     if op not in IDENTITY:
         raise ValueError(f"unknown combine op {op!r}")
     E = src_ids.shape[0]
+    if E == 0:  # empty relation: no edge contributes, everything is ⊕-identity
+        return jnp.full((n_dst,), IDENTITY[op], jnp.float32)
     pad = (-E) % EDGE_BLOCK
     if pad:
         # padding edges: src points past the frontier (gather fills the

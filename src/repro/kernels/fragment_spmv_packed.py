@@ -1,0 +1,154 @@
+"""Pallas TPU kernel: decode-fused fragment join-aggregate (paper §5-6).
+
+The packed-aware variant of :mod:`.fragment_spmv`: ``dst_ids`` and/or the
+measure column arrive as BCA bit-packed uint32 word streams and are decoded
+*inside* the SpMV edge-block loop — the fused-decompression design that is
+GQ-Fast's headline result. Per 4096-edge grid step the kernel pulls
+``EDGE_BLOCK·width/32`` words into VMEM, runs the static-column-select group
+decode (:func:`.bitunpack.decode_groups`), and feeds the decoded block straight
+into gather ⊗ measure → scatter-⊕. The decoded columns are never materialized
+in HBM; device memory holds the packed words only.
+
+Block geometry: EDGE_BLOCK = 4096 = 4·1024 values, so every block is
+word-aligned for any width (1024·width ≡ 0 mod 32) and the packed input block
+is exactly (EDGE_BLOCK/32, width) words — a static BlockSpec, no halo.
+
+Measure modes (static config):
+  * ``none``   — no measure operand; ⊗-factor 1 (COUNT/EXISTS hops).
+  * ``dense``  — float32 edge stream, as in the unpacked kernel (used when the
+    measure expression is not a single packed column).
+  * ``packed`` — BCA words; decoded ints are the measure values.
+  * ``dict``   — BCA words of dictionary indices + a VMEM-resident dictionary
+    (the DictBCA/Huffman-substitute decode: unpack + one small gather).
+
+Identical per-block math and combine order as the unpacked kernel, so results
+are bit-identical to the decoded path.
+
+Padding: ``src`` pads past the frontier (gather fills the ⊕-identity, which
+zeroes the edge product under every op); packed streams pad with zero words —
+trailing bits of a partial word are already zero in the `_pack_words` layout,
+so padding values decode to 0 and land on dst 0 with identity weight.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitunpack import GROUP, decode_groups
+from .fragment_spmv import (
+    EDGE_BLOCK,
+    IDENTITY,
+    _combine,
+    _edge_product,
+    _segment_combine,
+)
+
+GROUPS_PER_EDGE_BLOCK = EDGE_BLOCK // GROUP  # 128 groups of 32 values
+
+
+def _kernel(n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs):
+    w_ref, src_ref, dst_ref, *rest, out_ref = refs
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    if dst_width:
+        dst = decode_groups(dst_ref[...], dst_width).reshape(-1)
+    else:
+        dst = dst_ref[...]
+    if m_mode == "none":
+        m = jnp.ones(EDGE_BLOCK, jnp.float32)
+    elif m_mode == "dense":
+        m = rest[0][...]
+    else:
+        idx = decode_groups(rest[0][...], m_width).reshape(-1)
+        if m_mode == "dict":
+            m = jnp.take(rest[1][...], idx)
+        else:
+            m = idx.astype(jnp.float32)
+
+    prod = _edge_product(w_ref[...], src_ref[...], m, op)
+    blk = _segment_combine(prod, dst, n_dst, op)
+    out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+def _block_words(words: jnp.ndarray, width: int, n_blocks: int) -> jnp.ndarray:
+    """Zero-pad the word stream to whole edge blocks and shape it (G, width)."""
+    need = n_blocks * GROUPS_PER_EDGE_BLOCK * width
+    if words.shape[0] < need:
+        words = jnp.concatenate([words, jnp.zeros(need - words.shape[0], jnp.uint32)])
+    return words[:need].reshape(n_blocks * GROUPS_PER_EDGE_BLOCK, width)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_dst", "op", "dst_width", "m_mode", "m_width", "interpret"),
+)
+def fragment_spmv_packed(
+    weights: jnp.ndarray,
+    src_ids: jnp.ndarray,
+    dst: jnp.ndarray,  # uint32 words if dst_width else int32[E]
+    measure: jnp.ndarray | None,  # uint32 words | f32[E] | None, per m_mode
+    mdict: jnp.ndarray | None,  # f32[u] dictionary, m_mode == 'dict' only
+    n_dst: int,
+    dst_width: int = 0,
+    m_mode: str = "none",
+    m_width: int = 0,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    E = src_ids.shape[0]
+    if E == 0:  # empty relation: no edge contributes, everything is ⊕-identity
+        return jnp.full((n_dst,), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    n_blocks = max(1, (E + pad) // EDGE_BLOCK)
+    if pad:
+        src_ids = jnp.concatenate(
+            [src_ids, jnp.full(pad, weights.shape[0], jnp.int32)]
+        )
+
+    operands = [weights, src_ids]
+    in_specs = [
+        pl.BlockSpec(weights.shape, lambda i: (0,)),  # frontier resident
+        pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+    ]
+    if dst_width:
+        operands.append(_block_words(dst, dst_width, n_blocks))
+        in_specs.append(
+            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, dst_width), lambda i: (i, 0))
+        )
+    else:
+        if pad:
+            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
+        operands.append(dst)
+        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
+    if m_mode == "dense":
+        if pad:
+            measure = jnp.concatenate([measure, jnp.zeros(pad, jnp.float32)])
+        operands.append(measure)
+        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
+    elif m_mode in ("packed", "dict"):
+        operands.append(_block_words(measure, m_width, n_blocks))
+        in_specs.append(
+            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, m_width), lambda i: (i, 0))
+        )
+        if m_mode == "dict":
+            operands.append(mdict)
+            in_specs.append(pl.BlockSpec(mdict.shape, lambda i: (0,)))  # resident
+    elif m_mode != "none":
+        raise ValueError(f"unknown measure mode {m_mode!r}")
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_dst, op, dst_width, m_mode, m_width),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((n_dst,), lambda i: (0,)),  # accumulate over grid
+        out_shape=jax.ShapeDtypeStruct((n_dst,), jnp.float32),
+        interpret=interpret,
+    )(*operands)

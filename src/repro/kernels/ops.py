@@ -14,6 +14,7 @@ from .bitmap_ops import bitmap_and as _bitmap_and
 from .bitmap_ops import bitmap_and_popcount as _bitmap_and_popcount
 from .bitunpack import bitunpack as _bitunpack
 from .fragment_spmv import fragment_spmv as _fragment_spmv
+from .fragment_spmv_packed import fragment_spmv_packed as _fragment_spmv_packed
 
 
 def _interpret() -> bool:
@@ -35,6 +36,32 @@ def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int,
     if not use_pallas:
         return ref.fragment_spmv_ref(w, s, d, m, n_dst, op=op)
     return _fragment_spmv(w, s, d, m, n_dst, op=op, interpret=_interpret())
+
+
+def fragment_spmv_packed(weights, src_ids, dst, measure=None, mdict=None, *,
+                         n_dst: int, dst_width: int = 0, m_mode: str = "none",
+                         m_width: int = 0, op: str = "sum",
+                         use_pallas: bool = True):
+    """Decode-fused hop: ``dst``/``measure`` may be BCA word streams that are
+    unpacked block-at-a-time inside the SpMV (see fragment_spmv_packed.py)."""
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(src_ids, jnp.int32)
+    d = jnp.asarray(dst, jnp.uint32 if dst_width else jnp.int32)
+    m = measure
+    if m_mode == "dense":
+        m = jnp.asarray(m, jnp.float32)
+    elif m_mode in ("packed", "dict"):
+        m = jnp.asarray(m, jnp.uint32)
+    md = jnp.asarray(mdict, jnp.float32) if m_mode == "dict" else None
+    if not use_pallas:
+        return ref.fragment_spmv_packed_ref(
+            w, s, d, m, md, n_dst, dst_width=dst_width,
+            m_mode=m_mode, m_width=m_width, op=op,
+        )
+    return _fragment_spmv_packed(
+        w, s, d, m, md, n_dst, dst_width=dst_width,
+        m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
+    )
 
 
 def bitmap_and(a, b, use_pallas: bool = True):

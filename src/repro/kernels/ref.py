@@ -5,16 +5,19 @@ import jax
 import jax.numpy as jnp
 
 
-def bitunpack_ref(packed: jnp.ndarray, width: int, count: int) -> jnp.ndarray:
-    """Decode little-endian ``width``-bit values from uint32 words.
-
-    Value i occupies bits [i*width, (i+1)*width) of the word stream; a value may
-    straddle two words. Returns int32[count] (width <= 31 supported on-device;
-    the host codec handles wider)."""
-    idx = jnp.arange(count, dtype=jnp.uint32)
-    bit0 = idx * jnp.uint32(width)
-    w0 = (bit0 >> 5).astype(jnp.int32)
-    off = (bit0 & jnp.uint32(31)).astype(jnp.uint32)
+def bitgather_ref(packed: jnp.ndarray, width: int, ids: jnp.ndarray) -> jnp.ndarray:
+    """Decode the little-endian ``width``-bit values at positions ``ids`` from a
+    uint32 word stream — the double-word extraction at arbitrary positions.
+    Also the point-decode behind ``storage.DeviceColumn.gather``."""
+    idx = jnp.asarray(ids, jnp.uint32)
+    # split the bit offset as 32·q·width + r·width (q = idx//32) so nothing
+    # exceeds uint32: a plain idx*width wraps past 2^32 bits (~138M values at
+    # width 31) and would silently read from the wrong word. r·width < 1024
+    # and q·width < word count, which any indexable word stream satisfies.
+    q, r = idx >> 5, idx & jnp.uint32(31)
+    bitr = r * jnp.uint32(width)
+    w0 = (q * jnp.uint32(width) + (bitr >> 5)).astype(jnp.int32)
+    off = (bitr & jnp.uint32(31)).astype(jnp.uint32)
     lo = packed[w0]
     hi = packed[jnp.minimum(w0 + 1, packed.shape[0] - 1)]
     # 64-bit-free double-word extraction: value = (lo >> off) | (hi << (32-off)),
@@ -23,6 +26,14 @@ def bitunpack_ref(packed: jnp.ndarray, width: int, count: int) -> jnp.ndarray:
     word = jnp.where(off == 0, lo, (lo >> off) | _safe_shl(hi, jnp.uint32(32) - off))
     mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
     return (word & mask).astype(jnp.int32)
+
+
+def bitunpack_ref(packed: jnp.ndarray, width: int, count: int) -> jnp.ndarray:
+    """Decode little-endian ``width``-bit values from uint32 words.
+
+    Value i occupies bits [i*width, (i+1)*width) of the word stream; a value may
+    straddle two words. Returns int32[count]."""
+    return bitgather_ref(packed, width, jnp.arange(count, dtype=jnp.uint32))
 
 
 def _safe_shl(x: jnp.ndarray, s: jnp.ndarray) -> jnp.ndarray:
@@ -50,6 +61,32 @@ def fragment_spmv_ref(
     ew = jnp.where(ws == zero, zero, ws * measures)  # ∞·0 guard
     seg = jax.ops.segment_min if op == "min" else jax.ops.segment_max
     return seg(ew, dst_ids, num_segments=n_dst)
+
+
+def fragment_spmv_packed_ref(
+    weights: jnp.ndarray,
+    src_ids: jnp.ndarray,
+    dst,  # uint32 words if dst_width else i32[E]
+    measure,  # uint32 words | f32[E] | None, per m_mode
+    mdict,  # f32[u] | None
+    n_dst: int,
+    dst_width: int = 0,
+    m_mode: str = "none",
+    m_width: int = 0,
+    op: str = "sum",
+) -> jnp.ndarray:
+    """Decode-then-hop oracle for the fused kernel: whole-column bitunpack
+    followed by the plain SpMV — same math, decompression outside the loop."""
+    E = src_ids.shape[0]
+    d = bitunpack_ref(dst, dst_width, E) if dst_width else dst
+    if m_mode == "none":
+        m = jnp.ones(E, jnp.float32)
+    elif m_mode == "dense":
+        m = measure
+    else:
+        idx = bitunpack_ref(measure, m_width, E)
+        m = jnp.take(mdict, idx) if m_mode == "dict" else idx.astype(jnp.float32)
+    return fragment_spmv_ref(weights, src_ids, d, m, n_dst, op=op)
 
 
 def bitmap_and_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

@@ -18,9 +18,18 @@ def main() -> None:
     if args.workload == "analytics":
         import runpy
         import sys
+        from pathlib import Path
 
-        sys.argv = ["serve_analytics.py", "--requests", str(args.requests)]
-        runpy.run_path("examples/serve_analytics.py", run_name="__main__")
+        # resolve against the repo root (this file is src/repro/launch/serve.py)
+        # so `python -m repro.launch.serve` works from any working directory
+        script = Path(__file__).resolve().parents[3] / "examples" / "serve_analytics.py"
+        if not script.is_file():  # e.g. non-editable install: no examples/ tree
+            raise SystemExit(
+                f"analytics workload needs the repo checkout: {script} not found "
+                "(run from a source tree or `pip install -e .`)"
+            )
+        sys.argv = [str(script), "--requests", str(args.requests)]
+        runpy.run_path(str(script), run_name="__main__")
         return
 
     import jax

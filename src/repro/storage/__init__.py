@@ -1,0 +1,14 @@
+"""Compressed device-resident column store (paper §5-6; DESIGN.md §Storage)."""
+from .columns import (  # noqa: F401
+    DenseColumn,
+    DeviceColumn,
+    DictPackedColumn,
+    PackedColumn,
+)
+from .policy import (  # noqa: F401
+    build_device_column,
+    choose_device_encoding,
+    column_uniques,
+    device_space_report,
+    resolve_device_encoding,
+)

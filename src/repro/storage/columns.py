@@ -1,0 +1,169 @@
+"""Device column store (paper §5-6): per-column physical representation.
+
+GQ-Fast's central claim is that heavyweight compression and fully pipelined
+execution *coexist*: dense encodings (BCA / the Huffman-class dictionary
+substitute) have no random access, so decompression must happen inside the
+operator, never as a load-time pass. This module makes "decoded" vs "packed"
+a per-column *physical property* that the rest of the engine is agnostic to:
+
+  * :class:`DenseColumn`    — full-width int32/float32 device array (the old
+    decoded-CSR layout; also the universal fallback target).
+  * :class:`PackedColumn`   — BCA on device: little-endian ``width``-bit values
+    in a uint32 word stream (`core.fragments._pack_words` layout). Decoded
+    block-at-a-time in VMEM by the fused kernels, or wholesale by
+    ``materialize()`` for strategies without a packed path.
+  * :class:`DictPackedColumn` — the DictBCA/Huffman substitute: a global
+    frequency-sorted dictionary plus fixed-width packed dictionary indices.
+    (The host DictBCA codec's escape coding is a byte-stream space refinement
+    that needs a column-wide cumsum; the device layout keeps the block-local
+    decode property instead: index width = ⌈log2 #distinct⌉.)
+
+Uniform contract every column kind honors:
+
+  * ``materialize()`` — the full decoded device array (``out_dtype``).
+  * ``gather(ids)``   — decoded values at ``ids`` without materializing the
+    column (double-word bit extraction + optional dictionary lookup).
+  * ``device_nbytes`` — real bytes the column occupies in device memory.
+
+Strategies with no packed execution path (fragment_loop scalar loops, the
+edge-sharded distributed variant) call ``materialize()`` once per prepare /
+shard — a correct, documented fallback (DESIGN.md §Storage).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels.ref import bitgather_ref as _gather_packed
+
+
+def _memo_materialize(col, decode):
+    """Memoize whole-column decodes so repeated prepares of fallback
+    strategies (densify_plan, shard_edges) share one decoded copy instead of
+    pinning a fresh full-width array per prepared query. Traced values
+    (decode requested inside a jit trace, e.g. ``LCol.array`` in a complex
+    measure expression) are never cached — a tracer escaping its trace would
+    poison every later call."""
+    if col._dense is None:
+        out = decode()
+        if isinstance(out, jax.core.Tracer):
+            return out
+        col._dense = out
+    return col._dense
+
+
+class DeviceColumn:
+    """Abstract device-resident column; see module docstring for the contract."""
+
+    kind: str = "abstract"
+    count: int
+
+    def materialize(self) -> jnp.ndarray:
+        raise NotImplementedError
+
+    def gather(self, ids) -> jnp.ndarray:
+        raise NotImplementedError
+
+    @property
+    def device_nbytes(self) -> int:
+        raise NotImplementedError
+
+    @property
+    def materialized_nbytes(self) -> int:
+        """Bytes of the decoded fallback copy currently pinned by the
+        ``materialize()`` memo (0 when no fallback strategy has decoded this
+        column). Reported separately from ``device_nbytes`` so the space
+        report stays honest: after a fragment_loop/distributed prepare a
+        packed column occupies packed + dense bytes."""
+        d = getattr(self, "_dense", None)
+        return int(d.size) * d.dtype.itemsize if d is not None else 0
+
+
+@dataclass(eq=False)
+class DenseColumn(DeviceColumn):
+    """Fully decoded device array — zero-cost materialize."""
+
+    array: Any  # jnp.ndarray
+
+    kind = "dense"
+
+    @property
+    def count(self) -> int:
+        return int(self.array.shape[0])
+
+    def materialize(self) -> jnp.ndarray:
+        return self.array
+
+    def gather(self, ids) -> jnp.ndarray:
+        return self.array[jnp.asarray(ids)]
+
+    @property
+    def device_nbytes(self) -> int:
+        return int(self.array.size) * self.array.dtype.itemsize
+
+
+@dataclass(eq=False)
+class PackedColumn(DeviceColumn):
+    """BCA device layout: ``count`` values at ``width`` bits in uint32 words."""
+
+    words: Any  # jnp.ndarray uint32
+    width: int
+    count: int
+    out_dtype: Any = jnp.int32
+    _dense: Any = field(default=None, repr=False)  # materialize() memo
+
+    kind = "packed"
+
+    def materialize(self) -> jnp.ndarray:
+        from ..kernels import ops as K
+
+        return _memo_materialize(
+            self,
+            lambda: K.bitunpack(self.words, self.width, self.count).astype(
+                self.out_dtype
+            ),
+        )
+
+    def gather(self, ids) -> jnp.ndarray:
+        return _gather_packed(self.words, self.width, ids).astype(self.out_dtype)
+
+    @property
+    def device_nbytes(self) -> int:
+        return int(self.words.size) * 4
+
+
+@dataclass(eq=False)
+class DictPackedColumn(DeviceColumn):
+    """Dictionary + packed indices: value[i] = dictionary[unpack(words)[i]].
+
+    ``dictionary`` is frequency-sorted (popular values get small indices) so
+    the index stream matches the DictBCA codec's head distribution; it lives
+    in VMEM during fused decode (small: one slot per distinct value)."""
+
+    words: Any  # jnp.ndarray uint32 — packed dictionary indices
+    width: int  # ⌈log2 #distinct⌉
+    count: int
+    dictionary: Any  # jnp.ndarray (out dtype) — index → value
+    _dense: Any = field(default=None, repr=False)  # materialize() memo
+
+    kind = "dict"
+
+    def materialize(self) -> jnp.ndarray:
+        from ..kernels import ops as K
+
+        return _memo_materialize(
+            self,
+            lambda: jnp.take(
+                self.dictionary, K.bitunpack(self.words, self.width, self.count)
+            ),
+        )
+
+    def gather(self, ids) -> jnp.ndarray:
+        return jnp.take(self.dictionary, _gather_packed(self.words, self.width, ids))
+
+    @property
+    def device_nbytes(self) -> int:
+        return int(self.words.size) * 4 + int(self.dictionary.size) * self.dictionary.dtype.itemsize

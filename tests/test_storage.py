@@ -1,0 +1,362 @@
+"""Device column-store tests (DESIGN.md §Storage): pack→unpack round trips
+across widths 1–32, DeviceColumn contract, storage policy, and packed-vs-
+decoded executor equivalence on all three strategies vs the numpy oracle."""
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.engine import GQFastDatabase, GQFastEngine
+from repro.core.fragments import _pack_words
+from repro.core.reference import run_sql
+from repro.data import synth_graph as SG
+from repro.kernels import ops
+from repro.storage import (
+    DenseColumn,
+    DictPackedColumn,
+    PackedColumn,
+    build_device_column,
+    choose_device_encoding,
+    device_space_report,
+    resolve_device_encoding,
+)
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _roundtrip(vals: np.ndarray, width: int) -> np.ndarray:
+    words = _pack_words(vals, width)
+    return np.asarray(ops.bitunpack(words, width, vals.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# _pack_words → bitunpack round trips
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("width", list(range(1, 33)))
+def test_pack_unpack_all_widths(width):
+    """Every width 1–32, with word-straddling offsets (any width ∤ 32) and a
+    count that is neither a multiple of 1024 nor of 32."""
+    rng = np.random.default_rng(width)
+    count = 1024 + 513  # straddles block and group boundaries
+    vals = rng.integers(0, 2**width, size=count, dtype=np.uint64)
+    got = _roundtrip(vals, width)
+    # width 32 occupies the full int32 range: compare modulo 2^32
+    assert np.array_equal(got.astype(np.uint32), vals.astype(np.uint32))
+
+
+@pytest.mark.parametrize("count", [1, 31, 32, 33, 1023, 1024, 1025, 2050, 4097])
+def test_pack_unpack_odd_counts(count):
+    """Non-multiple-of-1024 counts: the kernel's zero-padded tail blocks must
+    not leak into the first ``count`` values."""
+    rng = np.random.default_rng(count)
+    for width in (1, 7, 11, 17, 29):
+        vals = rng.integers(0, 2**width, size=count, dtype=np.uint64)
+        assert np.array_equal(_roundtrip(vals, width), vals.astype(np.int64))
+
+
+def test_storage_imports_standalone():
+    """repro.storage must be importable before repro.core (the engine imports
+    storage, so an eager core import inside storage would cycle)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c",
+         "import repro.storage, repro.core; print('OK')"],
+        capture_output=True, text=True, env=env, timeout=120,
+    )
+    assert out.returncode == 0, out.stderr[-2000:]
+
+
+def test_pack_unpack_empty_fragment():
+    vals = np.zeros(0, dtype=np.uint64)
+    for width in (1, 13, 32):
+        assert _roundtrip(vals, width).shape == (0,)
+
+
+def test_spmv_kernels_empty_edge_list():
+    """A zero-row relation must hop to the ⊕-identity, not crash pallas_call."""
+    w = np.ones(10, np.float32)
+    e_i = np.zeros(0, np.int32)
+    e_w = np.zeros(0, np.uint32)
+    for op, ident in [("sum", 0.0), ("min", np.inf), ("bool", 0.0)]:
+        out = np.asarray(ops.fragment_spmv(w, e_i, e_i, e_i.astype(np.float32), 7, op=op))
+        assert np.all(out == ident)
+        out = np.asarray(ops.fragment_spmv_packed(
+            w, e_i, e_w, None, None, n_dst=7, dst_width=5, op=op))
+        assert np.all(out == ident)
+
+
+def test_dict_encoding_capped_by_dictionary_size():
+    """The fused kernel pins the dictionary in VMEM, so high-cardinality
+    columns must not choose dict even when it wins on HBM bytes."""
+    from repro.storage.policy import DICT_MAX_ENTRIES, _candidate_bytes
+
+    rng = np.random.default_rng(3)
+    # distinct count just over the cap; 17-bit dict indices would beat dense
+    vals = np.arange(DICT_MAX_ENTRIES + 1).repeat(4)
+    rng.shuffle(vals)
+    assert "dict" not in _candidate_bytes(vals, 2**40, is_key=False)
+    col = build_device_column(_CF(vals, 2**40), "dict", jnp.float32)
+    assert col.kind == "dense"  # explicit request degrades rather than OOMs
+
+
+def test_pack_unpack_property():
+    hypothesis = pytest.importorskip(
+        "hypothesis", reason="property tests need the [test] extra"
+    )
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None, max_examples=40)
+    @given(st.integers(1, 32), st.integers(0, 5000), st.integers(0, 2**31))
+    def prop(width, count, seed):
+        rng = np.random.default_rng(seed)
+        vals = rng.integers(0, 2**width, size=count, dtype=np.uint64)
+        got = _roundtrip(vals, width)
+        assert np.array_equal(got.astype(np.uint32), vals.astype(np.uint32))
+
+    prop()
+
+
+# ---------------------------------------------------------------------------
+# DeviceColumn contract
+# ---------------------------------------------------------------------------
+
+
+class _CF:
+    """Minimal ColumnFragments stand-in for build_device_column."""
+
+    def __init__(self, values, domain, packed=None, packed_width=0):
+        self.values = values
+        self.domain = domain
+        self.packed = packed
+        self.packed_width = packed_width
+
+
+def test_device_column_kinds_agree():
+    rng = np.random.default_rng(0)
+    vals = rng.integers(0, 1000, size=3000)
+    vals[::7] = 3  # skew so the dictionary ordering is non-trivial
+    cf = _CF(vals, 1000)
+    ids = rng.integers(0, vals.shape[0], size=257)
+    dense = build_device_column(cf, "dense", jnp.float32)
+    packed = build_device_column(cf, "packed", jnp.float32)
+    dpack = build_device_column(cf, "dict", jnp.float32)
+    assert isinstance(dense, DenseColumn)
+    assert isinstance(packed, PackedColumn) and isinstance(dpack, DictPackedColumn)
+    base = np.asarray(dense.materialize())
+    for col in (packed, dpack):
+        assert np.array_equal(np.asarray(col.materialize()), base)
+        assert np.array_equal(np.asarray(col.gather(ids)), base[ids])
+        assert col.device_nbytes < dense.device_nbytes
+        assert col.count == vals.shape[0]
+
+
+def test_packed_column_reuses_loader_words():
+    vals = np.arange(100) % 17
+    packed_words = _pack_words(vals, 5)
+    cf = _CF(vals, 17, packed=packed_words, packed_width=5)
+    col = build_device_column(cf, "packed", jnp.int32)
+    assert col.width == 5
+    assert np.array_equal(np.asarray(col.materialize()), vals)
+
+
+def test_policy_chooser():
+    rng = np.random.default_rng(1)
+    narrow = rng.integers(0, 50, size=10_000)  # 6-bit: packed ≈ 5× smaller
+    assert choose_device_encoding(narrow, 50, is_key=True) == "packed"
+    # wide domain but few distinct values → dict wins for measures
+    sparse = rng.choice([0, 9_999_999, 123456], size=10_000)
+    assert choose_device_encoding(sparse, 10_000_000, is_key=False) == "dict"
+    # keys never dict-encode
+    assert choose_device_encoding(sparse, 10_000_000, is_key=True) == "packed"
+    # ≥32-bit values can't pack
+    assert choose_device_encoding(narrow, 2**40, is_key=True) == "dense"
+    with pytest.raises(ValueError):
+        resolve_device_encoding("bogus", ("T", "K", "c"), narrow, 50, is_key=True)
+    with pytest.raises(ValueError):
+        resolve_device_encoding(
+            {("T", "K", "c"): "dict"}, ("T", "K", "c"), narrow, 50, is_key=True
+        )
+    # per-column override + auto fill
+    spec = {("T", "K", "c"): "dense"}
+    assert resolve_device_encoding(spec, ("T", "K", "c"), narrow, 50, True) == "dense"
+    assert resolve_device_encoding(spec, ("T", "K", "d"), narrow, 50, True) == "packed"
+
+
+def test_signed_and_wide_value_columns():
+    """Bit packing is unsigned: signed columns must not pack (silent low-bit
+    truncation); dict still applies — the dictionary keeps original values."""
+    rng = np.random.default_rng(2)
+    signed = rng.choice([-7, -1, 3, 12], size=4000)
+    assert choose_device_encoding(signed, 13, is_key=False) == "dict"
+    assert "packed" not in (
+        choose_device_encoding(signed, 13, is_key=True),  # keys: dense only
+    )
+    # explicit packed request on signed data degrades to dense, without a scan
+    assert resolve_device_encoding("packed", ("T", "K", "c"), signed, 13, False) == "dense"
+    col = build_device_column(_CF(signed, 13), "dict", jnp.float32)
+    assert np.array_equal(np.asarray(col.materialize()), signed)
+    # sparse huge-magnitude values: the rank mapping must scale with #distinct,
+    # not the value range (would be a ~17 GB allocation otherwise)
+    sparse = rng.choice(np.array([5, 2**31 - 3, 123456789]), size=4000)
+    col = build_device_column(_CF(sparse, 2**31), "dict", jnp.int32)
+    assert col.kind == "dict" and col.device_nbytes < 4 * 4000
+    assert np.array_equal(np.asarray(col.materialize()), sparse)
+
+
+# ---------------------------------------------------------------------------
+# Packed vs decoded execution — all strategies, vs the numpy oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def pubmed():
+    return SG.make_pubmed(n_docs=1500, n_terms=80, n_authors=400, seed=3)
+
+
+@pytest.fixture(scope="module")
+def dbs(pubmed):
+    packed = GQFastDatabase(pubmed, account_space=False)  # auto → packed columns
+    dense = GQFastDatabase(pubmed, account_space=False, device_encodings="dense")
+    return packed, dense
+
+
+CASES = [
+    ("SD", SG.QUERY_SD, {"d0": 5}),
+    ("FSD", SG.QUERY_FSD, {"d0": 5}),
+    ("AS", SG.QUERY_AS, {"a0": 7}),
+    ("AD", SG.QUERY_AD, {"t1": 3, "t2": 9}),
+    ("FAD", SG.QUERY_FAD, {"t1": 3, "t2": 9}),
+]
+
+
+def test_auto_policy_packs_bca_columns(dbs):
+    packed, _ = dbs
+    for (t, k), di in packed.device.indexes.items():
+        assert di.dst_col.kind == "packed", (t, k)
+
+
+@pytest.mark.parametrize("name,q,params", CASES, ids=[c[0] for c in CASES])
+def test_frontier_packed_bit_identical(dbs, pubmed, name, q, params):
+    """Acceptance: packed device storage changes bytes, not results — the
+    frontier output must be *bit-identical* to the decoded path, and both
+    match the materializing numpy oracle."""
+    packed, dense = dbs
+    a = GQFastEngine(packed).query(q, **params)
+    b = GQFastEngine(dense).query(q, **params)
+    assert np.array_equal(a, b), "packed frontier diverged from decoded"
+    ref = run_sql(pubmed, q, params)
+    np.testing.assert_allclose(a, ref, rtol=1e-4, atol=1e-4)
+    assert (a != 0).sum() > 0
+
+
+@pytest.mark.parametrize("name,q,params", CASES[:3], ids=[c[0] for c in CASES[:3]])
+def test_fragment_loop_packed_matches(dbs, pubmed, name, q, params):
+    packed, dense = dbs
+    a = GQFastEngine(packed, strategy="fragment_loop").query(q, **params)
+    b = GQFastEngine(dense, strategy="fragment_loop").query(q, **params)
+    assert np.array_equal(a, b)
+    ref = run_sql(pubmed, q, params)
+    np.testing.assert_allclose(a, ref, rtol=5e-3, atol=1e-2)
+
+
+def test_distributed_packed_matches(dbs):
+    """1-device mesh exercises shard_edges' materialize-per-shard fallback."""
+    from repro.launch.mesh import make_mesh
+
+    packed, dense = dbs
+    mesh = make_mesh((1,), ("data",))
+    for name, q, params in CASES[:3]:
+        a = GQFastEngine(packed, mesh=mesh).query(q, **params)
+        b = GQFastEngine(dense, mesh=mesh).query(q, **params)
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.slow
+def test_distributed_packed_8dev():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    env["PYTHONPATH"] = os.path.join(REPO, "src")
+    out = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent("""
+            import numpy as np
+            from repro.data.synth_graph import *
+            from repro.core.engine import GQFastDatabase, GQFastEngine
+            from repro.launch.mesh import make_mesh
+            schema = make_pubmed(n_docs=500, n_terms=50, n_authors=200)
+            packed = GQFastDatabase(schema, account_space=False)
+            dense = GQFastDatabase(schema, account_space=False,
+                                   device_encodings="dense")
+            mesh = make_mesh((8,), ("data",))
+            for q, p in [(QUERY_AS, {"a0": 7}), (QUERY_SD, {"d0": 5})]:
+                a = GQFastEngine(packed, mesh=mesh).query(q, **p)
+                b = GQFastEngine(dense, mesh=mesh).query(q, **p)
+                assert np.allclose(a, b, rtol=1e-4, atol=1e-4)
+            print("MATCH")
+        """)],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert out.returncode == 0, f"STDOUT:\n{out.stdout}\nSTDERR:\n{out.stderr[-3000:]}"
+    assert "MATCH" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# Space acceptance: ≥2× on BCA-eligible columns, real device bytes
+# ---------------------------------------------------------------------------
+
+
+def test_device_space_report_2x(dbs):
+    packed, dense = dbs
+    rep = device_space_report(packed.device)
+    base = device_space_report(dense.device)
+    for idx_name, idx in rep["indexes"].items():
+        for cname, col in idx["columns"].items():
+            if col["kind"] in ("packed", "dict"):
+                assert col["dense_bytes"] >= 2 * col["device_bytes"], (idx_name, cname)
+    assert rep["total_bytes"] < base["total_bytes"]
+    assert base["total_bytes"] == rep["dense_bytes"]
+    # the engine-level report carries the device section
+    assert packed.space_report()["device"]["total_bytes"] == rep["total_bytes"]
+
+
+def test_device_encoding_override_per_column(pubmed):
+    db = GQFastDatabase(
+        pubmed, account_space=False,
+        device_encodings={("DT", "Term", "Fre"): "dict"},
+    )
+    di = db.device.index("DT", "Term")
+    assert di.measure_cols["Fre"].kind == "dict"
+    assert di.dst_col.kind == "packed"  # auto fills the rest
+    got = GQFastEngine(db).query(SG.QUERY_SD, d0=5)
+    ref = run_sql(pubmed, SG.QUERY_SD, {"d0": 5})
+    np.testing.assert_allclose(got, ref, rtol=1e-4, atol=1e-4)
+
+
+def test_device_encoding_unknown_address_rejected(pubmed):
+    """A typo'd per-column override must error, not silently fall to auto."""
+    with pytest.raises(ValueError, match="match no index column"):
+        GQFastDatabase(
+            pubmed, account_space=False,
+            device_encodings={("DT", "Term", "fre"): "dense"},  # wrong case
+        )
+
+
+def test_materialized_memo_accounted_and_shared(pubmed):
+    """Fallback-strategy decodes pin one shared dense copy per packed column;
+    the space report surfaces it instead of silently claiming compression."""
+    db = GQFastDatabase(pubmed, account_space=False)
+    assert device_space_report(db.device)["materialized_bytes"] == 0
+    eng = GQFastEngine(db, strategy="fragment_loop")
+    eng.prepare(SG.QUERY_SD)
+    col = db.device.index("DT", "Term").dst_col
+    first = col.materialize()
+    assert col.materialize() is first  # memo: no second decoded copy
+    rep = device_space_report(db.device)
+    assert rep["materialized_bytes"] >= 4 * col.count
