@@ -36,6 +36,7 @@ def main() -> None:
         table56_denseid,
         table8_encodings,
         table9_decode,
+        throughput,
     )
 
     suites = {
@@ -47,6 +48,7 @@ def main() -> None:
         "table9": table9_decode.run,
         "fig15": fig15_parallel.run,
         "perf": perf_baseline.run,
+        "throughput": throughput.run,
     }
     from .common import RECORDS
 

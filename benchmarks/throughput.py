@@ -1,0 +1,80 @@
+"""Batched multi-query serving throughput (BENCH_throughput.json).
+
+us/query vs batch size 1/8/64 on the SD and AS dashboard shapes, for dense
+and packed device storage. Batch B runs through ``PreparedQuery.execute_batch``
+→ the SpMM serving path: every hop streams the CSR edge arrays from HBM once
+for the whole batch instead of once per query (the B× operand reuse that a
+``vmap`` of the single-query frontier cannot give). Records carry the
+amortization ratio (batch-1 us/query ÷ batch-B us/query).
+
+Acceptance gate (CI fast lane): batch-64 must amortize ≥ ``MIN_AMORTIZATION``×
+over batch-1 on every shape/encoding, and the batched block must stay
+bit-identical to the per-query loop — the suite raises (→ red CI) otherwise.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.engine import GQFastDatabase, GQFastEngine
+from repro.data import synth_graph as SG
+
+from .common import emit, timeit
+
+BATCH_SIZES = (1, 8, 64)
+MIN_AMORTIZATION = 2.0  # batch-64 us/query must be ≤ 0.5× batch-1
+
+
+def run() -> None:
+    schema = SG.make_pubmed(n_docs=8_000, n_terms=400, n_authors=2_000, seed=21)
+    dbs = [
+        ("packed", GQFastDatabase(schema, account_space=False)),
+        ("dense", GQFastDatabase(schema, account_space=False,
+                                 device_encodings="dense")),
+    ]
+    n_docs = schema.entities["Document"].size
+    n_authors = schema.entities["Author"].size
+    shapes = [
+        ("SD", SG.QUERY_SD, "d0", n_docs),
+        ("AS", SG.QUERY_AS, "a0", n_authors),
+    ]
+    failures = []
+    for enc, db in dbs:
+        eng = GQFastEngine(db, strategy="frontier")
+        for qname, sql, pname, dom in shapes:
+            pq = eng.prepare(sql)
+            rng = np.random.default_rng(7)
+            ids = rng.integers(0, dom, size=max(BATCH_SIZES))
+
+            # batched results must be bit-identical to the per-query loop
+            batched = pq.execute_batch(**{pname: ids})
+            loop = np.stack([pq(**{pname: int(i)}) for i in ids])
+            identical = bool(np.array_equal(batched, loop))
+
+            base_us = None
+            for B in BATCH_SIZES:
+                arr = ids[:B]
+                t = timeit(lambda: pq.execute_batch(**{pname: arr}), iters=3)
+                us_per_query = t / B * 1e6
+                if base_us is None:
+                    base_us = us_per_query
+                amort = base_us / us_per_query
+                emit(
+                    f"throughput/{qname}/{enc}/batch{B}", us_per_query,
+                    f"amortization={amort:.2f} bit_identical={identical} "
+                    f"total_ms={t*1e3:.1f}",
+                    batch=B, amortization=round(amort, 2),
+                    bit_identical=identical,
+                )
+            if not identical:
+                failures.append(f"{qname}/{enc}: batched != per-query loop")
+            if amort < MIN_AMORTIZATION:  # amort is the last (largest) batch
+                failures.append(
+                    f"{qname}/{enc}: batch-{max(BATCH_SIZES)} amortization "
+                    f"{amort:.2f}x < {MIN_AMORTIZATION}x"
+                )
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    run()

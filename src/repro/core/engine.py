@@ -78,6 +78,20 @@ class GQFastDatabase:
         return rep
 
 
+#: Ragged batches pad up to one of these sizes so the batched executable
+#: compiles a bounded number of times: powers of two up to 64, then
+#: multiples of 64 (a B=65 burst compiles the 128 bucket, not its own).
+BATCH_BUCKET_CAP = 64
+
+
+def batch_bucket(b: int) -> int:
+    """Smallest bucket ≥ b: next power of two up to BATCH_BUCKET_CAP, then
+    the next multiple of BATCH_BUCKET_CAP."""
+    if b <= BATCH_BUCKET_CAP:
+        return 1 << (b - 1).bit_length()
+    return -(-b // BATCH_BUCKET_CAP) * BATCH_BUCKET_CAP
+
+
 @dataclass
 class PreparedQuery:
     sql: str
@@ -86,17 +100,71 @@ class PreparedQuery:
     param_names: list[str]
     group_entity: str | None
     phys: PhysicalPlan | None = None  # lowered IR (None only for legacy callers)
+    batched_fn: Callable[..., Any] | None = None  # SpMM batch entry (frontier)
 
     def __call__(self, **params) -> np.ndarray:
         args = [params[n] for n in self.param_names]
         return np.asarray(self.fn(*args))
 
-    def execute_batch(self, **param_arrays) -> np.ndarray:
-        """vmap over parameter vectors (batched OLAP serving)."""
-        import jax
+    def _batch_args(self, param_arrays: dict) -> tuple[list[np.ndarray], int]:
+        """Validate one [B] array (or Python list) per parameter: every
+        parameter present, none scalar, all the same length."""
+        if not self.param_names:
+            raise ValueError(
+                "execute_batch needs a parameterized query (this one has none);"
+                " call the prepared query directly instead"
+            )
+        missing = [n for n in self.param_names if n not in param_arrays]
+        if missing:
+            raise TypeError(f"execute_batch missing parameter arrays: {missing}")
+        args, B = [], None
+        for n in self.param_names:
+            a = np.asarray(param_arrays[n])
+            if a.ndim == 0:
+                raise ValueError(
+                    f"execute_batch parameter {n!r} is a scalar; pass a list or"
+                    " 1-D array with one value per query (a scalar would"
+                    " silently broadcast to every query in the batch)"
+                )
+            if a.ndim != 1:
+                raise ValueError(
+                    f"execute_batch parameter {n!r} must be 1-D, got shape {a.shape}"
+                )
+            if B is None:
+                B = a.shape[0]
+            elif a.shape[0] != B:
+                raise ValueError(
+                    f"ragged batch: parameter {n!r} has length {a.shape[0]} but"
+                    f" {self.param_names[0]!r} has length {B}; all parameter"
+                    " arrays must have one entry per query"
+                )
+            args.append(a)
+        if B == 0:
+            raise ValueError("execute_batch got empty parameter arrays")
+        return args, B
 
-        args = [np.asarray(param_arrays[n]) for n in self.param_names]
-        return np.asarray(jax.vmap(self.fn)(*args))
+    def execute_batch(self, **param_arrays) -> np.ndarray:
+        """Serve B parameter bindings of this query in one pass → [B, out_dom].
+
+        On the frontier strategy this runs the batched SpMM executable
+        (``compile_frontier_batched``): each hop streams the edge arrays once
+        for the whole batch. Ragged B pads up to a bucket size (repeating the
+        last row; the pad rows are sliced off) so recompiles are bounded.
+        Strategies without a batched interpreter (fragment_loop, distributed
+        meshes) fall back to ``jax.vmap`` over the single-query executable —
+        same results, no edge-stream reuse."""
+        args, B = self._batch_args(param_arrays)
+        bucket = batch_bucket(B)
+        if bucket != B:  # bound recompiles on the fallback path too
+            args = [
+                np.concatenate([a, np.repeat(a[-1:], bucket - B, axis=0)])
+                for a in args
+            ]
+        if self.batched_fn is None:
+            import jax
+
+            return np.asarray(jax.vmap(self.fn)(*args))[:B]
+        return np.asarray(self.batched_fn(*args))[:B]
 
 
 class GQFastEngine:
@@ -117,16 +185,29 @@ class GQFastEngine:
         # per-execute mask/ref-resolution work is hoisted out of the hot path
         phys = lower(self.db.device, plan)
         names = list(phys.param_names)
+        bfn = None
         if self.mesh is not None:
+            sdb = X.shard_edges(self.db.device, self.mesh, self.shard_axes)
             fn = X.compile_frontier_distributed(
-                self.db.device, phys, self.mesh, self.shard_axes
+                self.db.device, phys, self.mesh, self.shard_axes,
+                sharded_db=sdb,
             )
+            if names:  # shard_map body vmaps over the parameter vectors
+                bfn = X.compile_frontier_distributed(
+                    self.db.device, phys, self.mesh, self.shard_axes,
+                    batched=True, sharded_db=sdb,
+                )
         else:
             strategy = self.strategy
             if strategy == "auto":
                 strategy = self._pick_strategy(plan)
             fn = X.STRATEGIES[strategy](self.db.device, phys)
-        pq = PreparedQuery(sql, plan, fn, names, plan.group_entity, phys)
+            if strategy == "frontier" and names:
+                # the SpMM serving path: one edge stream per hop for the whole
+                # batch. fragment_loop keeps the vmap fallback so its batched
+                # results stay bit-identical to its own single-query calls.
+                bfn = X.compile_frontier_batched(self.db.device, phys)
+        pq = PreparedQuery(sql, plan, fn, names, plan.group_entity, phys, bfn)
         self._cache[key] = pq
         return pq
 
@@ -168,5 +249,17 @@ class GQFastEngine:
 
     def query_topk(self, sql: str, k: int = 10, **params) -> list[tuple[int, float]]:
         scores = self.query(sql, **params)
+        return self._topk(scores, k)
+
+    def query_topk_batch(
+        self, sql: str, k: int = 10, **param_arrays
+    ) -> list[list[tuple[int, float]]]:
+        """Batched form of :meth:`query_topk`: one [B]-array per parameter,
+        one SpMM pass, one top-k list per query (dashboard panels)."""
+        scores = self.prepare(sql).execute_batch(**param_arrays)
+        return [self._topk(row, k) for row in scores]
+
+    @staticmethod
+    def _topk(scores: np.ndarray, k: int) -> list[tuple[int, float]]:
         idx = np.argsort(-scores)[:k]
         return [(int(i), float(scores[i])) for i in idx if scores[i] != 0]

@@ -357,16 +357,15 @@ class _FrontierInterp(_Interp):
     def edge_arrays(self, op: HopOp):
         return op.src_ids, op.dst_ids, None
 
-    def spmv_fused(self, w, op: HopOp):
-        """Decode-fused hop: stream packed columns straight into the kernel
-        (the paper's compression-inside-the-operator design). Engaged when the
-        dst column is bit-packed and/or the measure is a single packed column;
-        returns None when there is nothing to fuse (all-dense hop) and the
-        plain kernel path runs instead."""
-        from ..kernels import ops as K
-
-        dst_col = op.dst_col
-        dst_packed = isinstance(dst_col, PackedColumn)
+    def _packed_layout(self, op: HopOp):
+        """Classify the hop's physical layout for the decode-fused kernels:
+        returns None when there is nothing packed to fuse (all-dense hop),
+        else ``(dst_packed, m_mode, m_operand, m_width, mdict)``. A dense
+        ``m_mode`` leaves ``m_operand`` None — the caller evaluates the
+        measure expression and broadcasts it to its own frontier shape.
+        Single classification shared by the SpMV and SpMM fused paths so the
+        mode dispatch cannot drift between them."""
+        dst_packed = isinstance(op.dst_col, PackedColumn)
         m = op.measure if self.use_measures else None
         if m is None:
             m_mode, m_operand, m_width, mdict = "none", None, 0, None
@@ -380,20 +379,34 @@ class _FrontierInterp(_Interp):
             m_mode, m_operand, m_width, mdict = "dense", None, 0, None
         if not (dst_packed or m_mode in ("packed", "dict")):
             return None
+        return dst_packed, m_mode, m_operand, m_width, mdict
+
+    def spmv_fused(self, w, op: HopOp):
+        """Decode-fused hop: stream packed columns straight into the kernel
+        (the paper's compression-inside-the-operator design). Engaged when the
+        dst column is bit-packed and/or the measure is a single packed column;
+        returns None when there is nothing to fuse (all-dense hop) and the
+        plain kernel path runs instead."""
+        from ..kernels import ops as K
+
+        layout = self._packed_layout(op)
+        if layout is None:
+            return None
+        dst_packed, m_mode, m_operand, m_width, mdict = layout
         if m_mode == "dense":
             # complex measure expression over a packed index: evaluate it
             # (decoding any packed LCols it references) and stream it dense;
             # dst still decodes in VMEM
-            mv = eval_lexpr(m, self.params, self.scalars, self.col)
+            mv = eval_lexpr(op.measure, self.params, self.scalars, self.col)
             m_operand = jnp.broadcast_to(
                 jnp.asarray(mv, jnp.float32), (op.src_ids.shape[0],)
             )
         return K.fragment_spmv_packed(
             w, op.src_ids,
-            dst_col.words if dst_packed else dst_col.materialize(),
+            op.dst_col.words if dst_packed else op.dst_col.materialize(),
             m_operand, mdict,
             n_dst=op.dom_dst,
-            dst_width=dst_col.width if dst_packed else 0,
+            dst_width=op.dst_col.width if dst_packed else 0,
             m_mode=m_mode, m_width=m_width, op=self.sr.name,
         )
 
@@ -435,6 +448,148 @@ def compile_frontier(
     def run(*args):
         params = dict(zip(names, args))
         return execute_ir(phys, lambda sr, um: _FrontierInterp(params, sr, um))
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# Batched frontier strategy (multi-query SpMM serving path)
+# ---------------------------------------------------------------------------
+
+
+class _BatchedFrontierInterp(_FrontierInterp):
+    """Frontier semantics with a leading batch axis threaded through the
+    walker state: frontiers are [B, dom] matrices and each HopOp is one fused
+    SpMM pass (kernels/fragment_spmm.py) that streams the edge arrays once
+    for all B queries — not a vmap of the whole plan, so the kernel sees the
+    batch as a unit. Parameters arrive as [B, 1] columns (broadcast against
+    per-entity [dom] and per-edge [E] arrays yields [B, ·]); seed ids reshape
+    back to [B] for indexing. Per-op batching rules:
+
+      * SeedOp        — scatter B seed ids at once (one 2-D scatter-⊕);
+                        mask seeds run their sub-programs batched.
+      * EntityFilter/ — masks and degree vectors are [dom] (or [B, dom] when
+        DegreeFilter    parameter-dependent) and broadcast against [B, dom].
+      * GroupOp       — returns the [B, dom] accumulator (or mask) as-is.
+    """
+
+    def __init__(self, params: dict[str, Any], sr: Semiring,
+                 use_measures: bool = True, *, batch: int):
+        super().__init__(params, sr, use_measures)
+        self.batch = batch
+
+    def spawn(self) -> "_BatchedFrontierInterp":
+        return _BatchedFrontierInterp(self.params, BOOL_OR_AND, batch=self.batch)
+
+    def _seed_ids(self, i) -> jnp.ndarray:
+        """One seed slot → [B] int32 (constants broadcast across the batch)."""
+        v = self.resolve(i)
+        if isinstance(v, (int, float)):
+            return jnp.full((self.batch,), int(v), jnp.int32)
+        return jnp.asarray(v).reshape(-1).astype(jnp.int32)
+
+    def capture_scalars(self, op: SeedOp, sid):
+        # sid is [B]; keep scalars as [B, 1] columns so downstream expression
+        # broadcasting against [dom]/[E] arrays lands on [B, ·]
+        self.scalars = {
+            s.key: self.attr_col(s)[sid][:, None] for s in op.scalars.values()
+        }
+
+    def seed(self, op: SeedOp, state, cont):
+        sr, B = self.sr, self.batch
+        if op.ids is not None:
+            cols = [self._seed_ids(i) for i in op.ids]
+            idx = jnp.stack(cols, axis=1)  # [B, n_ids]
+            w = jnp.full((B, op.dom), sr.zero, jnp.float32)
+            # scatter-⊕ per row (duplicate ids accumulate multiplicity, as in
+            # the single-query path); sr.scatter takes any advanced index
+            w = sr.scatter(w, (jnp.arange(B)[:, None], idx), sr.one)
+            if op.scalars:
+                self.capture_scalars(op, cols[0])
+            return cont(w)
+        m = jnp.ones((B, op.dom), jnp.float32)
+        for prog in op.programs:
+            m = m * walk_ir(prog, self.spawn())
+        if op.const_mask is not None:
+            m = m * op.const_mask
+        for c in op.param_conds:
+            m = m * c.mask(self.params, self.attr_col).astype(jnp.float32)
+        return cont(sr.from_mask(m))
+
+    def hop(self, op: HopOp, state, cont):
+        from ..kernels import ops as K
+
+        sr, w = self.sr, state
+        if op.semijoin:
+            w = sr.binarize(w)
+        fused = self.spmm_fused(w, op)
+        if fused is not None:
+            return cont(fused)
+        src, dst = op.src_ids, op.dst_ids
+        E = src.shape[0]
+        if op.measure is not None and self.use_measures:
+            m = jnp.asarray(
+                eval_lexpr(op.measure, self.params, self.scalars, self.col),
+                jnp.float32,
+            )
+        else:
+            m = jnp.ones((), jnp.float32)
+        if m.ndim <= 1:  # scalar or shared per-edge stream → SpMM kernel
+            m = jnp.broadcast_to(m, (E,))
+        else:  # per-row measure (seed scalars / params) → [B, E], XLA fallback
+            m = jnp.broadcast_to(m, (w.shape[0], E))
+        return cont(K.fragment_spmm(w, src, dst, m, n_dst=op.dom_dst, op=sr.name))
+
+    def spmm_fused(self, w, op: HopOp):
+        """Batched decode-fused hop: packed dst/measure columns stream into
+        the SpMM kernel and decode once per block for all B rows. Same layout
+        classification as ``spmv_fused`` (`_packed_layout`); additionally
+        bails (→ dense path) when a measure expression is batch-dependent —
+        a per-row [B, E] dense stream has no fused single-pass formulation."""
+        from ..kernels import ops as K
+
+        layout = self._packed_layout(op)
+        if layout is None:
+            return None
+        dst_packed, m_mode, m_operand, m_width, mdict = layout
+        if m_mode == "dense":
+            mv = jnp.asarray(
+                eval_lexpr(op.measure, self.params, self.scalars, self.col),
+                jnp.float32,
+            )
+            if mv.ndim >= 2:  # batch-dependent measure: no shared edge stream
+                return None
+            m_operand = jnp.broadcast_to(mv, (op.src_ids.shape[0],))
+        return K.fragment_spmm_packed(
+            w, op.src_ids,
+            op.dst_col.words if dst_packed else op.dst_col.materialize(),
+            m_operand, mdict,
+            n_dst=op.dom_dst,
+            dst_width=op.dst_col.width if dst_packed else 0,
+            m_mode=m_mode, m_width=m_width, op=self.sr.name,
+        )
+
+
+def compile_frontier_batched(
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan
+) -> Callable[..., jnp.ndarray]:
+    """Batched serving entry: takes one [B] array per query parameter and
+    returns the [B, out_dom] result block in one traced pass — every HopOp
+    runs as a fused SpMM streaming the edge arrays once for the whole batch.
+    Each distinct B compiles once; callers bound recompiles by padding ragged
+    batches to bucket sizes (engine.PreparedQuery.execute_batch)."""
+    phys = ensure_lowered(db, plan)
+    names = list(phys.param_names)
+    if not names:
+        raise ValueError("batched execution needs at least one query parameter")
+
+    @jax.jit
+    def run(*args):
+        B = args[0].shape[0]
+        params = {n: jnp.asarray(a)[:, None] for n, a in zip(names, args)}
+        return execute_ir(
+            phys, lambda sr, um: _BatchedFrontierInterp(params, sr, um, batch=B)
+        )
 
     return run
 
@@ -641,6 +796,7 @@ def compile_frontier_distributed(
     db: DeviceDB, plan: ChainPlan | PhysicalPlan, mesh: Mesh,
     axes: tuple[str, ...] = ("data",),
     batched: bool = False, frontier_dtype=jnp.float32,
+    sharded_db: DeviceDB | None = None,
 ) -> Callable[..., jnp.ndarray]:
     """shard_map execution: frontier vectors replicated, edges sharded; each hop
     computes a local partial accumulator and ⊕-reduces it — the paper's parallel
@@ -649,10 +805,14 @@ def compile_frontier_distributed(
     Edge arrays flow through shard_map *arguments* (in_specs=P(axes)) so each
     device sees only its shard; small arrays (indptr, degrees, entity attrs,
     frontier vectors) are closure constants, i.e. replicated.
+
+    ``sharded_db`` lets callers compiling several entries against one mesh
+    (e.g. the engine's single + batched pair) share one ``shard_edges``
+    placement instead of device-putting every edge array per compile.
     """
     phys = ensure_lowered(db, plan)
     names = list(phys.param_names)
-    sdb = shard_edges(db, mesh, axes)
+    sdb = sharded_db if sharded_db is not None else shard_edges(db, mesh, axes)
 
     edge_tree = {
         f"{t}::{k}": {

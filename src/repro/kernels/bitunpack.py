@@ -27,31 +27,42 @@ GROUPS_PER_BLOCK = 32  # 1024 values per grid step
 BLOCK_VALUES = GROUP * GROUPS_PER_BLOCK
 
 
+@functools.lru_cache(maxsize=33)
+def _group_pattern(width: int):
+    """Static per-column decode pattern for one 32-value group: which word
+    holds each value's low bits, which its high bits, and the scalar shift
+    amounts. Depends only on ``width`` — hoisted out of the kernel body (and
+    memoized across traces) so no trace re-derives it and the kernel carries
+    only scalar shift constants, no iota/mod/select ops per block."""
+    bit0 = np.arange(GROUP) * width
+    w_lo = (bit0 // 32).astype(np.int32)  # word holding the low bits
+    w_hi = np.minimum(w_lo + 1, width - 1)
+    off = (bit0 % 32).astype(np.int64)  # python ints below; no uint wrap
+    mask = np.uint32((1 << width) - 1) if width < 32 else np.uint32(0xFFFFFFFF)
+    return w_lo, w_hi, off, mask
+
+
 def decode_groups(words: jnp.ndarray, width: int) -> jnp.ndarray:
     """In-kernel group decode: (G, width) uint32 words → (G, GROUP) int32 values.
 
     Every row holds GROUP consecutive values (GROUP·width bits = width words)
     with a *fixed* intra-group bit-offset pattern, so the two word operands per
-    output column are static column selects. Shared by the standalone
-    ``bitunpack`` kernel and the decode-fused SpMV (`fragment_spmv_packed`)."""
-    # static per-column patterns for one 32-value group
-    j = np.arange(GROUP)
-    bit0 = j * width
-    w_lo = (bit0 // 32).astype(np.int32)  # word holding the low bits
-    w_hi = np.minimum(w_lo + 1, width - 1)
-
-    # unrolled static column selects (no dynamic gather on TPU)
-    lo = jnp.stack([words[:, int(c)] for c in w_lo], axis=1)  # (G, 32)
-    hi = jnp.stack([words[:, int(c)] for c in w_hi], axis=1)
-    # bit offsets computed in-kernel (iota), not captured as a constant
-    offv = (
-        jax.lax.broadcasted_iota(jnp.uint32, (1, GROUP), 1) * jnp.uint32(width)
-    ) % jnp.uint32(32)
-    shl = (jnp.uint32(32) - offv) & jnp.uint32(31)
-    straddle = jnp.where(offv == 0, jnp.uint32(0), hi << shl)
-    word = jnp.where(offv == 0, lo, (lo >> offv) | straddle)
-    mask = jnp.uint32((1 << width) - 1) if width < 32 else jnp.uint32(0xFFFFFFFF)
-    return (word & mask).astype(jnp.int32)
+    output column are static column selects (unrolled, no dynamic gather on
+    TPU) and the per-column shifts are scalar constants resolved at trace time
+    (:func:`_group_pattern`) — the whole width-mask construction happens in
+    Python, never as in-kernel vector ops. Shared by the standalone
+    ``bitunpack`` kernel and the decode-fused SpMV/SpMM kernels."""
+    w_lo, w_hi, off, mask = _group_pattern(width)
+    cols = []
+    for c in range(GROUP):
+        lo = words[:, int(w_lo[c])]
+        o = int(off[c])
+        if o == 0:  # value starts word-aligned: no straddle term
+            v = lo
+        else:
+            v = (lo >> jnp.uint32(o)) | (words[:, int(w_hi[c])] << jnp.uint32(32 - o))
+        cols.append(v & mask)
+    return jnp.stack(cols, axis=1).astype(jnp.int32)
 
 
 def _kernel(width: int, packed_ref, out_ref):

@@ -1,0 +1,219 @@
+"""Pallas TPU kernel: batched fragment join-aggregate — the multi-query SpMM.
+
+``Y[b, dst] ⊕= W[b, src] ⊗ m`` over the edge list of a GQ-Fast index, for all
+``B`` frontier rows at once. This is the serving-path upgrade of
+:mod:`.fragment_spmv`: OLAP dashboards issue many concurrent queries that
+differ only in parameter bindings (paper §2 scenarios), and a ``vmap`` over
+the single-query hop streams the CSR edge arrays from HBM ``B`` times —
+batch-64 costs ~64× batch-1. Here the frontier *matrix* ``W[B, n_src]`` and
+the accumulator ``Y[B, n_dst]`` are VMEM-resident for the whole pass and each
+``EDGE_BLOCK``-edge block (src/dst/measure) is loaded from HBM **exactly once
+per pass** and applied to all ``B`` rows — the classic operand-reuse move of
+dense-accumulator graph engines, turning the hop from memory-bound SpMV into
+compute-dense SpMM.
+
+Same semiring surface as the SpMV (``op``: 'sum' | 'min' | 'max' | 'bool'),
+same block geometry (:mod:`.params`), same padding contract (src pads past the
+frontier so the gather fills the ⊕-identity; measure pads 0), and per-block
+math identical to the single-query kernel run row-wise — so a batched result
+is bit-identical to ``B`` independent SpMV calls.
+
+:func:`fragment_spmm_packed` is the decode-fused variant: dst/measure columns
+arrive as BCA bit-packed uint32 word streams and decode block-at-a-time in
+VMEM via :func:`.bitunpack.decode_groups` — one decode serves all ``B`` rows,
+so bit-packed columns keep their space win (and amortize their decode cost)
+under batching.
+
+The measure operand is shared across the batch (one edge list, one measure
+column, B frontiers). Per-row measures (e.g. seed-scalar-dependent measure
+expressions) have no single-stream formulation — ``ops.fragment_spmm`` routes
+those to the XLA vmap fallback instead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .bitunpack import decode_groups
+from .fragment_spmv import IDENTITY, _combine
+from .fragment_spmv_packed import GROUPS_PER_EDGE_BLOCK, _block_words
+from .params import EDGE_BLOCK
+
+
+def _edge_product_batched(W, src, m, op: str):
+    """W[:, src] ⊗ m for all rows: [B, E_blk], with the same ⊕-identity guard
+    as the single-query kernel (∞·0 = NaN on the min/max lattices)."""
+    zero = IDENTITY[op]
+    ws = jnp.take(W, src, axis=1, fill_value=zero)  # [B, EDGE_BLOCK]
+    if op == "sum":
+        return ws * m
+    if op == "bool":
+        return ((ws > 0) & (m != 0)).astype(jnp.float32)
+    return jnp.where(ws == zero, zero, ws * m)
+
+
+def _segment_combine_batched(prod, dst, n_dst: int, op: str):
+    """Scatter-⊕ of [B, E_blk] edge products into [B, n_dst]: one segment
+    reduction with the batch as trailing lanes (segment ids index axis 0)."""
+    if op == "sum":
+        seg = jax.ops.segment_sum
+    elif op == "min":
+        seg = jax.ops.segment_min
+    else:  # max | bool
+        seg = jax.ops.segment_max
+    return seg(prod.T, dst, num_segments=n_dst).T
+
+
+def _kernel(n_dst: int, op: str, w_ref, src_ref, dst_ref, m_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    prod = _edge_product_batched(w_ref[...], src_ref[...], m_ref[...], op)
+    blk = _segment_combine_batched(prod, dst_ref[...], n_dst, op)
+    out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dst", "op", "interpret"))
+def fragment_spmm(
+    weights: jnp.ndarray,  # f32[B, n_src] — the frontier matrix
+    src_ids: jnp.ndarray,  # i32[E]
+    dst_ids: jnp.ndarray,  # i32[E]
+    measures: jnp.ndarray,  # f32[E] — shared across the batch
+    n_dst: int,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    B = weights.shape[0]
+    E = src_ids.shape[0]
+    if E == 0:  # empty relation: no edge contributes, everything is ⊕-identity
+        return jnp.full((B, n_dst), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    if pad:
+        # same padding contract as the SpMV: src past the frontier (gather
+        # fills the ⊕-identity), measure 0 ⇒ identity contribution per op
+        src_ids = jnp.concatenate([src_ids, jnp.full(pad, weights.shape[1], jnp.int32)])
+        dst_ids = jnp.concatenate([dst_ids, jnp.zeros(pad, jnp.int32)])
+        measures = jnp.concatenate([measures, jnp.zeros(pad, jnp.float32)])
+    n_blocks = max(1, (E + pad) // EDGE_BLOCK)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, n_dst, op),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec(weights.shape, lambda i: (0, 0)),  # frontier resident
+            pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((B, n_dst), lambda i: (0, 0)),  # accumulate
+        out_shape=jax.ShapeDtypeStruct((B, n_dst), jnp.float32),
+        interpret=interpret,
+    )(weights, src_ids, dst_ids, measures)
+
+
+def _kernel_packed(
+    n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs
+):
+    w_ref, src_ref, dst_ref, *rest, out_ref = refs
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    if dst_width:
+        dst = decode_groups(dst_ref[...], dst_width).reshape(-1)
+    else:
+        dst = dst_ref[...]
+    if m_mode == "none":
+        m = jnp.ones(EDGE_BLOCK, jnp.float32)
+    elif m_mode == "dense":
+        m = rest[0][...]
+    else:
+        idx = decode_groups(rest[0][...], m_width).reshape(-1)
+        if m_mode == "dict":
+            m = jnp.take(rest[1][...], idx)
+        else:
+            m = idx.astype(jnp.float32)
+
+    prod = _edge_product_batched(w_ref[...], src_ref[...], m, op)
+    blk = _segment_combine_batched(prod, dst, n_dst, op)
+    out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_dst", "op", "dst_width", "m_mode", "m_width", "interpret"),
+)
+def fragment_spmm_packed(
+    weights: jnp.ndarray,  # f32[B, n_src]
+    src_ids: jnp.ndarray,  # i32[E]
+    dst: jnp.ndarray,  # uint32 words if dst_width else i32[E]
+    measure: jnp.ndarray | None,  # uint32 words | f32[E] | None, per m_mode
+    mdict: jnp.ndarray | None,  # f32[u] dictionary, m_mode == 'dict' only
+    n_dst: int,
+    dst_width: int = 0,
+    m_mode: str = "none",
+    m_width: int = 0,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Decode-fused batched hop: one in-VMEM block decode serves all B rows.
+    Same operand layout and per-block math as ``fragment_spmv_packed``."""
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    B = weights.shape[0]
+    E = src_ids.shape[0]
+    if E == 0:
+        return jnp.full((B, n_dst), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    n_blocks = max(1, (E + pad) // EDGE_BLOCK)
+    if pad:
+        src_ids = jnp.concatenate(
+            [src_ids, jnp.full(pad, weights.shape[1], jnp.int32)]
+        )
+
+    operands = [weights, src_ids]
+    in_specs = [
+        pl.BlockSpec(weights.shape, lambda i: (0, 0)),  # frontier resident
+        pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
+    ]
+    if dst_width:
+        operands.append(_block_words(dst, dst_width, n_blocks))
+        in_specs.append(
+            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, dst_width), lambda i: (i, 0))
+        )
+    else:
+        if pad:
+            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
+        operands.append(dst)
+        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
+    if m_mode == "dense":
+        if pad:
+            measure = jnp.concatenate([measure, jnp.zeros(pad, jnp.float32)])
+        operands.append(measure)
+        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
+    elif m_mode in ("packed", "dict"):
+        operands.append(_block_words(measure, m_width, n_blocks))
+        in_specs.append(
+            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, m_width), lambda i: (i, 0))
+        )
+        if m_mode == "dict":
+            operands.append(mdict)
+            in_specs.append(pl.BlockSpec(mdict.shape, lambda i: (0,)))  # resident
+    elif m_mode != "none":
+        raise ValueError(f"unknown measure mode {m_mode!r}")
+
+    return pl.pallas_call(
+        functools.partial(_kernel_packed, n_dst, op, dst_width, m_mode, m_width),
+        grid=(n_blocks,),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((B, n_dst), lambda i: (0, 0)),  # accumulate
+        out_shape=jax.ShapeDtypeStruct((B, n_dst), jnp.float32),
+        interpret=interpret,
+    )(*operands)

@@ -27,7 +27,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-EDGE_BLOCK = 4096
+from .params import EDGE_BLOCK  # shared block geometry (kernels/params.py)
 
 # ⊕-identity per combine op ("no path reaches this entity")
 IDENTITY = {

@@ -9,9 +9,10 @@ decode (:func:`.bitunpack.decode_groups`), and feeds the decoded block straight
 into gather ⊗ measure → scatter-⊕. The decoded columns are never materialized
 in HBM; device memory holds the packed words only.
 
-Block geometry: EDGE_BLOCK = 4096 = 4·1024 values, so every block is
-word-aligned for any width (1024·width ≡ 0 mod 32) and the packed input block
-is exactly (EDGE_BLOCK/32, width) words — a static BlockSpec, no halo.
+Block geometry comes from :mod:`.params` (the single source of truth):
+EDGE_BLOCK = 4096 = 4·1024 values, so every block is word-aligned for any
+width (1024·width ≡ 0 mod 32) and the packed input block is exactly
+(EDGE_BLOCK/32, width) words — a static BlockSpec, no halo.
 
 Measure modes (static config):
   * ``none``   — no measure operand; ⊗-factor 1 (COUNT/EXISTS hops).
@@ -39,12 +40,12 @@ from jax.experimental import pallas as pl
 
 from .bitunpack import GROUP, decode_groups
 from .fragment_spmv import (
-    EDGE_BLOCK,
     IDENTITY,
     _combine,
     _edge_product,
     _segment_combine,
 )
+from .params import EDGE_BLOCK
 
 GROUPS_PER_EDGE_BLOCK = EDGE_BLOCK // GROUP  # 128 groups of 32 values
 

@@ -13,6 +13,8 @@ from . import ref
 from .bitmap_ops import bitmap_and as _bitmap_and
 from .bitmap_ops import bitmap_and_popcount as _bitmap_and_popcount
 from .bitunpack import bitunpack as _bitunpack
+from .fragment_spmm import fragment_spmm as _fragment_spmm
+from .fragment_spmm import fragment_spmm_packed as _fragment_spmm_packed
 from .fragment_spmv import fragment_spmv as _fragment_spmv
 from .fragment_spmv_packed import fragment_spmv_packed as _fragment_spmv_packed
 
@@ -36,6 +38,49 @@ def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int,
     if not use_pallas:
         return ref.fragment_spmv_ref(w, s, d, m, n_dst, op=op)
     return _fragment_spmv(w, s, d, m, n_dst, op=op, interpret=_interpret())
+
+
+def fragment_spmm(weights, src_ids, dst_ids, measures, n_dst: int,
+                  op: str = "sum", use_pallas: bool = True):
+    """Batched multi-query hop: ``Y[b, dst] ⊕= W[b, src] ⊗ m`` with one edge
+    stream serving all B frontier rows (see fragment_spmm.py). ``measures``
+    may be [E] (shared — the fused-kernel case) or [B, E] (per-row, e.g. a
+    seed-scalar-dependent measure expression): per-row streams have no
+    single-pass formulation and always take the XLA fallback, a vmap'd
+    segment-combine."""
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(src_ids, jnp.int32)
+    d = jnp.asarray(dst_ids, jnp.int32)
+    m = jnp.asarray(measures, jnp.float32)
+    if m.ndim == 2 or not use_pallas:
+        return ref.fragment_spmm_ref(w, s, d, m, n_dst, op=op)
+    return _fragment_spmm(w, s, d, m, n_dst, op=op, interpret=_interpret())
+
+
+def fragment_spmm_packed(weights, src_ids, dst, measure=None, mdict=None, *,
+                         n_dst: int, dst_width: int = 0, m_mode: str = "none",
+                         m_width: int = 0, op: str = "sum",
+                         use_pallas: bool = True):
+    """Decode-fused batched hop: packed dst/measure word streams decode once
+    per 4096-edge block in VMEM and serve all B frontier rows."""
+    w = jnp.asarray(weights, jnp.float32)
+    s = jnp.asarray(src_ids, jnp.int32)
+    d = jnp.asarray(dst, jnp.uint32 if dst_width else jnp.int32)
+    m = measure
+    if m_mode == "dense":
+        m = jnp.asarray(m, jnp.float32)
+    elif m_mode in ("packed", "dict"):
+        m = jnp.asarray(m, jnp.uint32)
+    md = jnp.asarray(mdict, jnp.float32) if m_mode == "dict" else None
+    if not use_pallas:
+        return ref.fragment_spmm_packed_ref(
+            w, s, d, m, md, n_dst, dst_width=dst_width,
+            m_mode=m_mode, m_width=m_width, op=op,
+        )
+    return _fragment_spmm_packed(
+        w, s, d, m, md, n_dst, dst_width=dst_width,
+        m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
+    )
 
 
 def fragment_spmv_packed(weights, src_ids, dst, measure=None, mdict=None, *,

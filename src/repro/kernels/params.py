@@ -1,0 +1,16 @@
+"""Shared block geometry for the edge-streaming kernels (single source of truth).
+
+Every fragment kernel — the SpMV pair (:mod:`.fragment_spmv`,
+:mod:`.fragment_spmv_packed`) and the batched SpMM pair
+(:mod:`.fragment_spmm`) — streams the edge arrays through VMEM in blocks of
+``EDGE_BLOCK`` edges per grid step. The value is load-bearing for the packed
+variants: EDGE_BLOCK = 4096 = 4·1024 values, and 1024·width ≡ 0 (mod 32) for
+every width 1–32, so each block starts and ends word-aligned in the BCA uint32
+word stream and the packed input block is exactly
+``(EDGE_BLOCK/GROUP, width)`` words — a static BlockSpec, no halo. Changing it
+to anything that is not a multiple of 1024 breaks that alignment, which is why
+the constant lives here and nowhere else.
+"""
+from __future__ import annotations
+
+EDGE_BLOCK = 4096  # edges per grid step; must stay a multiple of 1024

@@ -89,6 +89,52 @@ def fragment_spmv_packed_ref(
     return fragment_spmv_ref(weights, src_ids, d, m, n_dst, op=op)
 
 
+def fragment_spmm_ref(
+    weights: jnp.ndarray,  # f32[B, n_src]
+    src_ids: jnp.ndarray,  # i32[E]
+    dst_ids: jnp.ndarray,  # i32[E]
+    measures: jnp.ndarray,  # f32[E] shared, or f32[B, E] per-row
+    n_dst: int,
+    op: str = "sum",
+) -> jnp.ndarray:
+    """Batched hop oracle: B independent SpMVs (vmap'd segment-combine).
+    Also the XLA fallback for per-row measure streams, which the fused SpMM
+    kernel cannot express (one edge stream serves the whole batch there)."""
+    if measures.ndim == 1:
+        return jax.vmap(
+            lambda w: fragment_spmv_ref(w, src_ids, dst_ids, measures, n_dst, op=op)
+        )(weights)
+    return jax.vmap(
+        lambda w, m: fragment_spmv_ref(w, src_ids, dst_ids, m, n_dst, op=op)
+    )(weights, measures)
+
+
+def fragment_spmm_packed_ref(
+    weights: jnp.ndarray,  # f32[B, n_src]
+    src_ids: jnp.ndarray,
+    dst,  # uint32 words if dst_width else i32[E]
+    measure,  # uint32 words | f32[E] | None, per m_mode
+    mdict,  # f32[u] | None
+    n_dst: int,
+    dst_width: int = 0,
+    m_mode: str = "none",
+    m_width: int = 0,
+    op: str = "sum",
+) -> jnp.ndarray:
+    """Decode-then-hop oracle for the fused batched kernel: whole-column
+    bitunpack once, then the vmap'd SpMV sweep."""
+    E = src_ids.shape[0]
+    d = bitunpack_ref(dst, dst_width, E) if dst_width else dst
+    if m_mode == "none":
+        m = jnp.ones(E, jnp.float32)
+    elif m_mode == "dense":
+        m = measure
+    else:
+        idx = bitunpack_ref(measure, m_width, E)
+        m = jnp.take(mdict, idx) if m_mode == "dict" else idx.astype(jnp.float32)
+    return fragment_spmm_ref(weights, src_ids, d, m, n_dst, op=op)
+
+
 def bitmap_and_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     """Word-wise AND of two uint32 bitmap word arrays."""
     return a & b
