@@ -16,6 +16,12 @@ import time
 ARTIFACT_DIR = os.path.join("artifacts", "bench")
 
 
+#: Repo-root consolidated perf file: suite → headline metrics, merged across
+#: invocations (running one suite updates only its entry) so the perf
+#: trajectory is tracked in-repo across PRs.
+PERF_FILE = "BENCH_perf.json"
+
+
 def _write_artifact(suite: str, records: list[dict], seconds: float,
                     error: str | None) -> None:
     os.makedirs(ARTIFACT_DIR, exist_ok=True)
@@ -26,11 +32,33 @@ def _write_artifact(suite: str, records: list[dict], seconds: float,
         json.dump(payload, f, indent=1)
 
 
+def _update_perf_summary(suite: str, records: list[dict], seconds: float,
+                         error: str | None) -> None:
+    summary: dict = {}
+    if os.path.exists(PERF_FILE):
+        try:
+            with open(PERF_FILE) as f:
+                summary = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            summary = {}
+    suites = summary.setdefault("suites", {})
+    entry: dict = {
+        "seconds": round(seconds, 1),
+        "metrics": {r["name"]: r["us_per_call"] for r in records if "name" in r},
+    }
+    if error:
+        entry["error"] = error
+    suites[suite] = entry
+    with open(PERF_FILE, "w") as f:
+        json.dump(summary, f, indent=1, sort_keys=True)
+
+
 def main() -> None:
     from . import (
         fig14_pipelining,
         perf_baseline,
         fig15_parallel,
+        selectivity,
         table3_runtime,
         table4_space,
         table56_denseid,
@@ -49,6 +77,7 @@ def main() -> None:
         "fig15": fig15_parallel.run,
         "perf": perf_baseline.run,
         "throughput": throughput.run,
+        "selectivity": selectivity.run,
     }
     from .common import RECORDS
 
@@ -66,6 +95,7 @@ def main() -> None:
             print(f"{name}/ERROR,0,{err}")
         dt = time.time() - t0
         _write_artifact(name, RECORDS[start:], dt, err)
+        _update_perf_summary(name, RECORDS[start:], dt, err)
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     # roofline summary (if dry-run artifacts exist)
     try:

@@ -1,0 +1,146 @@
+"""Frontier-selectivity sweep: block-skipping speedup vs full scan.
+
+GQ-Fast's core claim (paper §4-5) is that selective relationship queries touch
+only the reachable index fragments. This suite measures how well the
+active-block machinery (kernels/active.py + the scalar-prefetch kernels)
+restores that property for the streaming SpMV/SpMM formulation: one hop over a
+fixed CSR index, seed selectivity swept 10⁻⁴ … 1, ``block_skipping='auto'``
+timed against the always-scan baseline. The frontier support is a contiguous
+source range — the shape real seed-reachable fragments have in CSR order
+(sorted by src), where block-granular skipping pays off; a support scattered
+uniformly over the whole domain touches every block and 'auto' correctly
+falls back to the scan (that regime is the s=1.0 row).
+
+Emitted per selectivity: both times, the speedup, the surviving-block
+fraction, and ``bit_identical`` (skip vs scan must agree exactly — skipped
+blocks contribute the ⊕-identity). Hard gates (CI fast lane goes red on
+violation): bit_identical everywhere, ≥``MIN_SPEEDUP_AT_1PCT``× at 1%
+selectivity, and ≤``MAX_OVERHEAD_AT_FULL``× at 100% (the heuristic must cost
+~nothing when it decides not to skip).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+SELECTIVITIES = (1e-4, 1e-3, 1e-2, 1e-1, 1.0)
+#: CI gate on the smoke shape — the acceptance target (≥5×) is what the full
+#: shape actually delivers (~30× here); the gate stays loose so a slow runner
+#: doesn't flake the lane.
+MIN_SPEEDUP_AT_1PCT = 2.0
+MAX_OVERHEAD_AT_FULL = 1.1
+
+N_SRC, DEG, N_DST = 65_536, 16, 8_192  # E = 1,048,576 → 256 edge blocks
+BATCH = 8
+
+
+def _dataset(seed: int = 7):
+    rng = np.random.default_rng(seed)
+    E = N_SRC * DEG
+    src = np.repeat(np.arange(N_SRC, dtype=np.int32), DEG)  # CSR order
+    dst = rng.integers(0, N_DST, E).astype(np.int32)
+    m = rng.random(E).astype(np.float32)
+    return src, dst, m
+
+
+def _frontier(selectivity: float) -> np.ndarray:
+    """Contiguous support of ⌈s·n_src⌉ sources (seed-reachable fragments are
+    contiguous runs of the src-sorted edge arrays)."""
+    k = max(1, round(selectivity * N_SRC))
+    w = np.zeros(N_SRC, np.float32)
+    w[:k] = 1.0
+    return w
+
+
+def run() -> None:
+    from repro.kernels import active, ops
+
+    src, dst, m = _dataset()
+    blocks = active.block_ranges(src)
+    failures: list[str] = []
+
+    def check(tag: str, scan_fn, skip_fn, selectivity: float, frac: float):
+        ref = np.asarray(scan_fn())
+        got = np.asarray(skip_fn())
+        bit = bool(np.array_equal(ref, got))
+        t_scan = timeit(lambda: scan_fn().block_until_ready())
+        t_skip = timeit(lambda: skip_fn().block_until_ready())
+        speedup = t_scan / t_skip
+        emit(
+            f"selectivity/{tag}/s={selectivity:g}",
+            t_skip * 1e6,
+            f"speedup={speedup:.2f}x",
+            selectivity=selectivity,
+            scan_us=round(t_scan * 1e6, 1),
+            skip_us=round(t_skip * 1e6, 1),
+            speedup=round(speedup, 2),
+            active_fraction=round(frac, 4),
+            bit_identical=bit,
+        )
+        if not bit:
+            failures.append(f"{tag} s={selectivity:g}: skip != scan")
+        return speedup
+
+    for s in SELECTIVITIES:
+        w = _frontier(s)
+        _, _, frac = active.active_block_list_np(w != 0, *blocks)
+        sp = check(
+            "spmv",
+            lambda: ops.fragment_spmv(w, src, dst, m, N_DST, op="sum",
+                                      block_skipping="off"),
+            lambda: ops.fragment_spmv(w, src, dst, m, N_DST, op="sum",
+                                      blocks=blocks, block_skipping="auto"),
+            s, frac,
+        )
+        if s == 1e-2 and sp < MIN_SPEEDUP_AT_1PCT:
+            failures.append(
+                f"spmv speedup {sp:.2f}x at 1% selectivity "
+                f"(gate {MIN_SPEEDUP_AT_1PCT}x)"
+            )
+        if s == 1.0 and sp < 1.0 / MAX_OVERHEAD_AT_FULL:
+            failures.append(
+                f"spmv 'auto' overhead {1.0 / sp:.2f}x at full selectivity "
+                f"(gate {MAX_OVERHEAD_AT_FULL}x)"
+            )
+
+    # decode-fused path: packed dst (13-bit) + dict-packed measure
+    from repro.core.fragments import _pack_words
+
+    dw = max(1, int(N_DST - 1).bit_length())
+    words_dst = _pack_words(dst, dw)
+    n_uniq = 64
+    rng = np.random.default_rng(17)
+    midx = rng.integers(0, n_uniq, src.shape[0]).astype(np.int32)
+    mw = max(1, int(n_uniq - 1).bit_length())
+    words_m = _pack_words(midx, mw)
+    mdict = rng.random(n_uniq).astype(np.float32)
+    w = _frontier(1e-2)
+    _, _, frac = active.active_block_list_np(w != 0, *blocks)
+    check(
+        "spmv_packed",
+        lambda: ops.fragment_spmv_packed(
+            w, src, words_dst, words_m, mdict, n_dst=N_DST, dst_width=dw,
+            m_mode="dict", m_width=mw, op="sum", block_skipping="off"),
+        lambda: ops.fragment_spmv_packed(
+            w, src, words_dst, words_m, mdict, n_dst=N_DST, dst_width=dw,
+            m_mode="dict", m_width=mw, op="sum",
+            blocks=blocks, block_skipping="auto"),
+        1e-2, frac,
+    )
+
+    # batched SpMM: B queries, block list = union of per-query supports
+    W = np.stack([np.roll(_frontier(1e-2), i * N_SRC // 64) for i in range(BATCH)])
+    sup = (W != 0).any(axis=0)
+    _, _, frac = active.active_block_list_np(sup, *blocks)
+    check(
+        "spmm",
+        lambda: ops.fragment_spmm(W, src, dst, m, N_DST, op="sum",
+                                  block_skipping="off"),
+        lambda: ops.fragment_spmm(W, src, dst, m, N_DST, op="sum",
+                                  blocks=blocks, block_skipping="auto"),
+        1e-2, frac,
+    )
+
+    if failures:
+        raise RuntimeError("selectivity gates failed: " + "; ".join(failures))

@@ -101,10 +101,34 @@ class PreparedQuery:
     group_entity: str | None
     phys: PhysicalPlan | None = None  # lowered IR (None only for legacy callers)
     batched_fn: Callable[..., Any] | None = None  # SpMM batch entry (frontier)
+    strategy: str = "frontier"  # resolved (auto → the picked one)
+    block_skipping: str = "auto"  # frontier-sparsity mode baked into fn
+    hop_estimates: list[dict] | None = None  # per-hop selectivity estimates
 
     def __call__(self, **params) -> np.ndarray:
         args = [params[n] for n in self.param_names]
         return np.asarray(self.fn(*args))
+
+    def explain(self) -> str:
+        """Human-readable execution summary: the op pipeline, the resolved
+        strategy, the block-skipping mode, and per-hop estimated active
+        fractions (the selectivity model behind strategy choice and the
+        skip-vs-scan heuristic, DESIGN.md §Sparsity)."""
+        lines = [
+            f"query: {' '.join(self.sql.split())}",
+            f"strategy: {self.strategy}",
+            f"block_skipping: {self.block_skipping}",
+            f"params: {self.param_names}",
+        ]
+        if self.phys is not None:
+            sig = " -> ".join(type(op).__name__ for op in self.phys.ops)
+            lines.append(f"ops: {sig}")
+        for h in self.hop_estimates or []:
+            lines.append(
+                f"  hop I_{h['table']}.{h['src_key']}: "
+                f"est_active_fraction={h['est_active_fraction']:.4g}"
+            )
+        return "\n".join(lines)
 
     def _batch_args(self, param_arrays: dict) -> tuple[list[np.ndarray], int]:
         """Validate one [B] array (or Python list) per parameter: every
@@ -176,8 +200,20 @@ class GQFastEngine:
         self.shard_axes = shard_axes
         self._cache: dict[tuple[str, str], PreparedQuery] = {}
 
-    def prepare(self, sql: str) -> PreparedQuery:
-        key = (sql, self.strategy)
+    def prepare(self, sql: str, block_skipping: str = "auto") -> PreparedQuery:
+        """Compile ``sql`` once for repeated execution. ``block_skipping``
+        ('auto' | 'on' | 'off') sets the frontier-sparsity mode baked into the
+        executable (DESIGN.md §Sparsity): 'auto' skips inactive edge blocks
+        when the estimated/observed active fraction is small, 'on' forces the
+        scalar-prefetch kernels, 'off' always full-scans."""
+        from ..kernels.ops import BLOCK_SKIPPING_MODES
+
+        if block_skipping not in BLOCK_SKIPPING_MODES:
+            raise ValueError(
+                f"block_skipping must be one of {BLOCK_SKIPPING_MODES}, "
+                f"got {block_skipping!r}"
+            )
+        key = (sql, self.strategy, block_skipping)
         if key in self._cache:
             return self._cache[key]
         plan = plan_query(self.db.schema, parse(sql))
@@ -187,6 +223,7 @@ class GQFastEngine:
         names = list(phys.param_names)
         bfn = None
         if self.mesh is not None:
+            strategy = "distributed"  # skipping n/a: sharded XLA hops
             sdb = X.shard_edges(self.db.device, self.mesh, self.shard_axes)
             fn = X.compile_frontier_distributed(
                 self.db.device, phys, self.mesh, self.shard_axes,
@@ -201,44 +238,71 @@ class GQFastEngine:
             strategy = self.strategy
             if strategy == "auto":
                 strategy = self._pick_strategy(plan)
-            fn = X.STRATEGIES[strategy](self.db.device, phys)
+            fn = X.STRATEGIES[strategy](
+                self.db.device, phys, block_skipping=block_skipping
+            )
             if strategy == "frontier" and names:
                 # the SpMM serving path: one edge stream per hop for the whole
                 # batch. fragment_loop keeps the vmap fallback so its batched
                 # results stay bit-identical to its own single-query calls.
-                bfn = X.compile_frontier_batched(self.db.device, phys)
-        pq = PreparedQuery(sql, plan, fn, names, plan.group_entity, phys, bfn)
+                bfn = X.compile_frontier_batched(
+                    self.db.device, phys, block_skipping=block_skipping
+                )
+        pq = PreparedQuery(
+            sql, plan, fn, names, plan.group_entity, phys, bfn,
+            strategy=strategy, block_skipping=block_skipping,
+            hop_estimates=self._hop_fractions(plan),
+        )
         self._cache[key] = pq
         return pq
+
+    def _hop_fractions(self, plan: ChainPlan) -> list[dict]:
+        """Per-hop estimated active fraction: seed cardinality pushed through
+        average fanouts. ``frontier_est × (E/h)`` edges are expected to be
+        touched out of E, the reached-destination count caps at the dst
+        domain, and a mask seed starts whole-domain (fraction 1). This is the
+        shared selectivity model behind ``_pick_strategy`` and the explain()
+        report; the runtime skip heuristic measures the real support instead
+        (kernels/ops.py)."""
+        from .algebra import RelHop, SeedIds
+
+        if isinstance(plan.seed, SeedIds):
+            ids = plan.seed.ids if isinstance(plan.seed.ids, list) else [plan.seed.ids]
+            frontier_est: float | None = float(len(ids))
+        else:
+            frontier_est = None  # mask seed: whole-domain support
+        hops = []
+        for s in plan.steps:
+            if not isinstance(s, RelHop) or s.degree_filter:
+                continue
+            idx = self.db.host_indexes[(s.table, s.src_key)]
+            E = max(idx.num_edges, 1)
+            h = max(idx.indptr.shape[0] - 1, 1)
+            if frontier_est is None:
+                frontier_est = float(h)
+            touched = min(frontier_est * (E / h), float(E))
+            hops.append({
+                "table": s.table,
+                "src_key": s.src_key,
+                "est_active_fraction": touched / E,
+            })
+            frontier_est = min(touched, float(self.db.schema.domain_size(s.dst_entity)))
+        return hops
 
     def _pick_strategy(self, plan: ChainPlan) -> str:
         """Beyond-paper: cost-based strategy choice. The paper's fragment-at-a-
         time execution is *work-efficient* (touches only reachable fragments);
         the vectorized frontier pass is *throughput-efficient* (whole-relation
-        SpMV). Estimate the touched fraction from average degrees: sparse seeds
-        → fragment_loop, dense traversals → frontier (EXPERIMENTS.md §Perf)."""
-        from .algebra import RelHop, SeedIds
+        SpMV). The seed-cardinality × fanout selectivity estimate
+        (:meth:`_hop_fractions`) decides: if every hop touches a small
+        fraction of its relation, the scalar fragment walk wins; once any hop
+        goes dense, the vectorized frontier does (EXPERIMENTS.md §Perf)."""
+        from .algebra import SeedIds
 
         if not isinstance(plan.seed, SeedIds):
             return "frontier"  # mask seeds are whole-domain already
-        frontier_est = 1.0
-        worst_fraction = 0.0
-        first = True
-        for s in plan.steps:
-            if not isinstance(s, RelHop) or s.degree_filter:
-                continue
-            idx = self.db.host_indexes[(s.table, s.src_key)]
-            edges = max(idx.num_edges, 1)
-            h = idx.indptr.shape[0] - 1
-            deg = np.diff(idx.indptr)
-            # first hop: plan for the worst (max-degree) seed — the prepared
-            # query serves arbitrary parameters and Zipf heads dominate cost;
-            # later hops mix many fragments, so the average is representative
-            est_deg = float(deg.max()) if first else edges / max(h, 1)
-            first = False
-            touched_edges = frontier_est * est_deg
-            worst_fraction = max(worst_fraction, min(touched_edges / edges, 1.0))
-            frontier_est = min(touched_edges, self.db.schema.domain_size(s.dst_entity))
+        fracs = [h["est_active_fraction"] for h in self._hop_fractions(plan)]
+        worst_fraction = max(fracs, default=1.0)
         # crossover measured on this host (benchmarks/perf_baseline): the scalar
         # loop wins while < ~15% of the relation is touched; on TPU the vector
         # path's advantage is larger, so deployments should retune this knob

@@ -39,6 +39,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..kernels import active as active_meta
 from ..storage import (
     DenseColumn,
     DeviceColumn,
@@ -82,6 +83,11 @@ class DeviceIndex:
     dst_col: DeviceColumn  # int32[E] decoded view
     degrees: jnp.ndarray | None = None
     measure_cols: dict[str, DeviceColumn] = field(default_factory=dict)
+    # per-EDGE_BLOCK [src_min, src_max] over the CSR-ordered edge arrays
+    # (kernels/active.py) — the frontier-sparsity block-skipping metadata;
+    # None (e.g. shard-built indexes) disables skipping for this index
+    block_src_min: np.ndarray | None = None
+    block_src_max: np.ndarray | None = None
 
     @property
     def dst_ids(self) -> jnp.ndarray:
@@ -125,11 +131,15 @@ def build_device_db(
         enc = resolve_device_encoding(
             device_encodings, (table, key, other), cf.values, cf.domain, is_key=True
         )
+        src = idx.src_ids()
+        bmin, bmax = active_meta.block_ranges(src)
         di = DeviceIndex(
             indptr=jnp.asarray(idx.indptr, dtype=jnp.int32),
-            src_ids=jnp.asarray(idx.src_ids(), dtype=jnp.int32),
+            src_ids=jnp.asarray(src, dtype=jnp.int32),
             dst_col=build_device_column(cf, enc, jnp.int32),
             degrees=jnp.asarray(np.diff(idx.indptr), dtype=jnp.int32),
+            block_src_min=bmin,
+            block_src_max=bmax,
         )
         for m, cf in idx.columns.items():
             if m == other:
@@ -312,11 +322,37 @@ class _Interp:
 
 class _FrontierInterp(_Interp):
     """Dense frontier vectors; each hop is one fused gather⊗measure→scatter-⊕
-    kernel call."""
+    kernel call.
+
+    Frontier sparsity (DESIGN.md §Sparsity): every hop first short-circuits an
+    all-zero frontier inside the trace (``lax.cond`` on the support count — a
+    died-early chain stops paying per-hop scan cost), then passes the index's
+    per-block src-range metadata to the kernel dispatch so blocks the support
+    cannot reach are never streamed. ``block_skipping`` ('auto' | 'on' |
+    'off') is threaded through from prepare time."""
+
+    # Subclasses whose hops run collectives (the edge-sharded distributed
+    # interp) must not branch per-hop: lax.cond with a psum inside one branch
+    # deadlocks when shards disagree on the frontier. They opt out here.
+    early_exit = True
+
+    def __init__(self, params: dict[str, Any], sr: Semiring,
+                 use_measures: bool = True, block_skipping: str = "auto"):
+        super().__init__(params, sr, use_measures)
+        self.block_skipping = block_skipping
 
     def spawn(self) -> "_FrontierInterp":
         """Interpreter for a mask sub-program (always the boolean semiring)."""
-        return _FrontierInterp(self.params, BOOL_OR_AND)
+        return _FrontierInterp(
+            self.params, BOOL_OR_AND, block_skipping=self.block_skipping
+        )
+
+    def blocks_for(self, op: HopOp):
+        """The hop's (src_min, src_max) skip metadata, or None when absent or
+        skipping is off — kernel dispatch treats both as 'full scan'."""
+        if self.block_skipping == "off" or op.block_src_min is None:
+            return None
+        return (op.block_src_min, op.block_src_max)
 
     def seed(self, op: SeedOp, state, cont):
         sr = self.sr
@@ -342,9 +378,23 @@ class _FrontierInterp(_Interp):
         sr, w = self.sr, state
         if op.semijoin:
             w = sr.binarize(w)
+        if not self.early_exit:
+            return cont(self._hop_body(w, op))
+        # all-zero frontier short-circuit: the hop's result is the ⊕-identity
+        # accumulator whatever the index holds, so skip the kernel entirely —
+        # in-trace, so multi-hop chains that die early stop scanning
+        out_shape = w.shape[:-1] + (op.dom_dst,)
+        return cont(jax.lax.cond(
+            jnp.count_nonzero(w != sr.zero) == 0,
+            lambda w: jnp.full(out_shape, sr.zero, jnp.float32),
+            lambda w: self._hop_body(w, op),
+            w,
+        ))
+
+    def _hop_body(self, w, op: HopOp):
         fused = self.spmv_fused(w, op)
         if fused is not None:
-            return cont(fused)
+            return fused
         src, dst, valid = self.edge_arrays(op)
         E = src.shape[0]
         if op.measure is not None and self.use_measures:
@@ -352,7 +402,7 @@ class _FrontierInterp(_Interp):
             m = jnp.broadcast_to(jnp.asarray(m, jnp.float32), (E,))
         else:
             m = jnp.ones(E, jnp.float32)
-        return cont(self.spmv(w, src, dst, m, valid, op))
+        return self.spmv(w, src, dst, m, valid, op)
 
     def edge_arrays(self, op: HopOp):
         return op.src_ids, op.dst_ids, None
@@ -408,12 +458,16 @@ class _FrontierInterp(_Interp):
             n_dst=op.dom_dst,
             dst_width=op.dst_col.width if dst_packed else 0,
             m_mode=m_mode, m_width=m_width, op=self.sr.name,
+            blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
     def spmv(self, w, src, dst, m, valid, op: HopOp):
         from ..kernels import ops as K
 
-        return K.fragment_spmv(w, src, dst, m, n_dst=op.dom_dst, op=self.sr.name)
+        return K.fragment_spmv(
+            w, src, dst, m, n_dst=op.dom_dst, op=self.sr.name,
+            blocks=self.blocks_for(op), block_skipping=self.block_skipping,
+        )
 
     def degree_filter(self, op: DegreeFilterOp, state, cont):
         return cont(self.sr.mask(state, self.degrees(op) > 0))
@@ -439,7 +493,8 @@ class _FrontierInterp(_Interp):
 
 
 def compile_frontier(
-    db: DeviceDB, plan: ChainPlan | PhysicalPlan
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan,
+    block_skipping: str = "auto",
 ) -> Callable[..., jnp.ndarray]:
     phys = ensure_lowered(db, plan)
     names = list(phys.param_names)
@@ -447,7 +502,12 @@ def compile_frontier(
     @jax.jit
     def run(*args):
         params = dict(zip(names, args))
-        return execute_ir(phys, lambda sr, um: _FrontierInterp(params, sr, um))
+        return execute_ir(
+            phys,
+            lambda sr, um: _FrontierInterp(
+                params, sr, um, block_skipping=block_skipping
+            ),
+        )
 
     return run
 
@@ -474,12 +534,16 @@ class _BatchedFrontierInterp(_FrontierInterp):
     """
 
     def __init__(self, params: dict[str, Any], sr: Semiring,
-                 use_measures: bool = True, *, batch: int):
-        super().__init__(params, sr, use_measures)
+                 use_measures: bool = True, *, batch: int,
+                 block_skipping: str = "auto"):
+        super().__init__(params, sr, use_measures, block_skipping=block_skipping)
         self.batch = batch
 
     def spawn(self) -> "_BatchedFrontierInterp":
-        return _BatchedFrontierInterp(self.params, BOOL_OR_AND, batch=self.batch)
+        return _BatchedFrontierInterp(
+            self.params, BOOL_OR_AND, batch=self.batch,
+            block_skipping=self.block_skipping,
+        )
 
     def _seed_ids(self, i) -> jnp.ndarray:
         """One seed slot → [B] int32 (constants broadcast across the batch)."""
@@ -516,15 +580,15 @@ class _BatchedFrontierInterp(_FrontierInterp):
             m = m * c.mask(self.params, self.attr_col).astype(jnp.float32)
         return cont(sr.from_mask(m))
 
-    def hop(self, op: HopOp, state, cont):
+    def _hop_body(self, w, op: HopOp):
+        # the [B, n_src] frontier reaches the kernel dispatch whole: the block
+        # list is computed from the union of per-row supports (support_mask),
+        # so one SMEM list serves the entire batch
         from ..kernels import ops as K
 
-        sr, w = self.sr, state
-        if op.semijoin:
-            w = sr.binarize(w)
         fused = self.spmm_fused(w, op)
         if fused is not None:
-            return cont(fused)
+            return fused
         src, dst = op.src_ids, op.dst_ids
         E = src.shape[0]
         if op.measure is not None and self.use_measures:
@@ -538,7 +602,10 @@ class _BatchedFrontierInterp(_FrontierInterp):
             m = jnp.broadcast_to(m, (E,))
         else:  # per-row measure (seed scalars / params) → [B, E], XLA fallback
             m = jnp.broadcast_to(m, (w.shape[0], E))
-        return cont(K.fragment_spmm(w, src, dst, m, n_dst=op.dom_dst, op=sr.name))
+        return K.fragment_spmm(
+            w, src, dst, m, n_dst=op.dom_dst, op=self.sr.name,
+            blocks=self.blocks_for(op), block_skipping=self.block_skipping,
+        )
 
     def spmm_fused(self, w, op: HopOp):
         """Batched decode-fused hop: packed dst/measure columns stream into
@@ -567,11 +634,13 @@ class _BatchedFrontierInterp(_FrontierInterp):
             n_dst=op.dom_dst,
             dst_width=op.dst_col.width if dst_packed else 0,
             m_mode=m_mode, m_width=m_width, op=self.sr.name,
+            blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
 
 def compile_frontier_batched(
-    db: DeviceDB, plan: ChainPlan | PhysicalPlan
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan,
+    block_skipping: str = "auto",
 ) -> Callable[..., jnp.ndarray]:
     """Batched serving entry: takes one [B] array per query parameter and
     returns the [B, out_dom] result block in one traced pass — every HopOp
@@ -588,7 +657,10 @@ def compile_frontier_batched(
         B = args[0].shape[0]
         params = {n: jnp.asarray(a)[:, None] for n, a in zip(names, args)}
         return execute_ir(
-            phys, lambda sr, um: _BatchedFrontierInterp(params, sr, um, batch=B)
+            phys,
+            lambda sr, um: _BatchedFrontierInterp(
+                params, sr, um, batch=B, block_skipping=block_skipping
+            ),
         )
 
     return run
@@ -662,17 +734,19 @@ class _FragmentLoopInterp(_Interp):
 
 
 def compile_fragment_loop(
-    db: DeviceDB, plan: ChainPlan | PhysicalPlan
+    db: DeviceDB, plan: ChainPlan | PhysicalPlan,
+    block_skipping: str = "auto",
 ) -> Callable[..., jnp.ndarray]:
     """Nested fori_loops over fragments, scalar per-edge accumulator updates.
     Only id-seeded chains (SD/FSD/AS shapes); mask seeds and semijoins fall
-    back to the frontier strategy."""
+    back to the frontier strategy. ``block_skipping`` only applies to that
+    fallback — the scalar loop already touches only reached fragments."""
     phys = ensure_lowered(db, plan)
     seed_op = phys.ops[0]
     if seed_op.ids is None or any(
         isinstance(op, HopOp) and op.semijoin for op in phys.ops
     ):
-        return compile_frontier(db, phys)
+        return compile_frontier(db, phys, block_skipping=block_skipping)
     phys = densify_plan(phys)  # scalar loops have no packed path (§Storage)
     names = list(phys.param_names)
 
@@ -724,11 +798,19 @@ def shard_edges(db: DeviceDB, mesh: Mesh, axes: tuple[str, ...]) -> DeviceDB:
 
 class _DistributedInterp(_FrontierInterp):
     """Frontier semantics with edge arrays drawn from the shard_map argument
-    trees and one ⊕-collective per hop (psum/pmin/pmax by semiring)."""
+    trees and one ⊕-collective per hop (psum/pmin/pmax by semiring).
+
+    No per-hop lax.cond early exit (``early_exit = False``): each hop ends in
+    a psum/pmin/pmax and a collective inside one cond branch deadlocks when
+    shards disagree about the frontier. Block skipping is likewise off — the
+    sharded hop is an XLA segment-reduce over shard-local padded edge arrays,
+    not a Pallas block stream, so there are no blocks to skip."""
+
+    early_exit = False
 
     def __init__(self, params, sr, use_measures=True, *, edges=None, side=None,
                  axes=("data",), frontier_dtype=jnp.float32):
-        super().__init__(params, sr, use_measures)
+        super().__init__(params, sr, use_measures, block_skipping="off")
         self.edges = edges
         self.side = side
         self.axes = axes

@@ -189,6 +189,10 @@ class HopOp:
     dst_col: Any  # repro.storage.DeviceColumn
     measure: LExpr | None = None
     semijoin: bool = False
+    # per-block [src_min, src_max] skip metadata (DeviceIndex.block_src_*);
+    # None when the index was built without it → hop always full-scans
+    block_src_min: Any = None
+    block_src_max: Any = None
 
     @property
     def dst_ids(self):
@@ -289,6 +293,8 @@ def lower(db, plan: ChainPlan) -> PhysicalPlan:
                 db.schema.domain_size(s.dst_entity),
                 di.indptr, di.src_ids, di.dst_col,
                 measure=measure, semijoin=s.semijoin,
+                block_src_min=getattr(di, "block_src_min", None),
+                block_src_max=getattr(di, "block_src_max", None),
             ))
         else:  # EntityStep
             factor = (

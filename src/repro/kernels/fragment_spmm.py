@@ -22,7 +22,15 @@ is bit-identical to ``B`` independent SpMV calls.
 arrive as BCA bit-packed uint32 word streams and decode block-at-a-time in
 VMEM via :func:`.bitunpack.decode_groups` — one decode serves all ``B`` rows,
 so bit-packed columns keep their space win (and amortize their decode cost)
-under batching.
+under batching. Operand layout and spec construction are shared with the
+packed SpMV (:mod:`.fragment_spmv_packed`).
+
+:func:`fragment_spmm_active` / :func:`fragment_spmm_packed_active` are the
+frontier-sparsity variants (kernels/active.py): the batch's supports union
+into **one** block list (a block survives when any query's support intersects
+it — the contract ``support_mask`` implements for ``[B, n_src]`` frontiers),
+which rides in SMEM via ``pltpu.PrefetchScalarGridSpec`` and drives the edge
+streams' ``index_map`` so only surviving blocks are DMA'd once per pass.
 
 The measure operand is shared across the batch (one edge list, one measure
 column, B frontiers). Per-row measures (e.g. seed-scalar-dependent measure
@@ -36,10 +44,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
-from .bitunpack import decode_groups
 from .fragment_spmv import IDENTITY, _combine
-from .fragment_spmv_packed import GROUPS_PER_EDGE_BLOCK, _block_words
+from .fragment_spmv_packed import (
+    _active_specs,
+    _decode_block,
+    _packed_operands,
+    _scan_specs,
+)
 from .params import EDGE_BLOCK
 
 
@@ -117,6 +130,67 @@ def fragment_spmm(
     )(weights, src_ids, dst_ids, measures)
 
 
+def _kernel_active(n_dst: int, op: str, na_ref, bi_ref,
+                   w_ref, src_ref, dst_ref, m_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    @pl.when(i < na_ref[0])
+    def _compute():
+        prod = _edge_product_batched(w_ref[...], src_ref[...], m_ref[...], op)
+        blk = _segment_combine_batched(prod, dst_ref[...], n_dst, op)
+        out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dst", "op", "interpret"))
+def fragment_spmm_active(
+    weights: jnp.ndarray,  # f32[B, n_src]
+    src_ids: jnp.ndarray,
+    dst_ids: jnp.ndarray,
+    measures: jnp.ndarray,
+    block_idx: jnp.ndarray,  # i32[C] — union of the B queries' active blocks
+    n_active: jnp.ndarray,  # i32[1]
+    n_dst: int,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Frontier-sparsity batched hop: only the blocks named by ``block_idx``
+    (the union of per-query supports) are DMA'd, each applied to all B rows.
+    Same math and combine order as :func:`fragment_spmm` → bit-identical."""
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    B = weights.shape[0]
+    E = src_ids.shape[0]
+    if E == 0:
+        return jnp.full((B, n_dst), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    if pad:
+        src_ids = jnp.concatenate([src_ids, jnp.full(pad, weights.shape[1], jnp.int32)])
+        dst_ids = jnp.concatenate([dst_ids, jnp.zeros(pad, jnp.int32)])
+        measures = jnp.concatenate([measures, jnp.zeros(pad, jnp.float32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (n_active, block_idx) land in SMEM
+        grid=(block_idx.shape[0],),
+        in_specs=[
+            pl.BlockSpec(weights.shape, lambda i, na, bi: (0, 0)),  # resident
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)),
+        ],
+        out_specs=pl.BlockSpec((B, n_dst), lambda i, na, bi: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_active, n_dst, op),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_dst), jnp.float32),
+        interpret=interpret,
+    )(n_active, block_idx, weights, src_ids, dst_ids, measures)
+
+
 def _kernel_packed(
     n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs
 ):
@@ -126,21 +200,7 @@ def _kernel_packed(
     def _init():
         out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
 
-    if dst_width:
-        dst = decode_groups(dst_ref[...], dst_width).reshape(-1)
-    else:
-        dst = dst_ref[...]
-    if m_mode == "none":
-        m = jnp.ones(EDGE_BLOCK, jnp.float32)
-    elif m_mode == "dense":
-        m = rest[0][...]
-    else:
-        idx = decode_groups(rest[0][...], m_width).reshape(-1)
-        if m_mode == "dict":
-            m = jnp.take(rest[1][...], idx)
-        else:
-            m = idx.astype(jnp.float32)
-
+    dst, m = _decode_block(dst_width, m_mode, m_width, dst_ref, rest)
     prod = _edge_product_batched(w_ref[...], src_ref[...], m, op)
     blk = _segment_combine_batched(prod, dst, n_dst, op)
     out_ref[...] = _combine(out_ref[...], blk, op)
@@ -173,47 +233,83 @@ def fragment_spmm_packed(
         return jnp.full((B, n_dst), IDENTITY[op], jnp.float32)
     pad = (-E) % EDGE_BLOCK
     n_blocks = max(1, (E + pad) // EDGE_BLOCK)
-    if pad:
-        src_ids = jnp.concatenate(
-            [src_ids, jnp.full(pad, weights.shape[1], jnp.int32)]
-        )
-
-    operands = [weights, src_ids]
-    in_specs = [
-        pl.BlockSpec(weights.shape, lambda i: (0, 0)),  # frontier resident
-        pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
-    ]
-    if dst_width:
-        operands.append(_block_words(dst, dst_width, n_blocks))
-        in_specs.append(
-            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, dst_width), lambda i: (i, 0))
-        )
-    else:
-        if pad:
-            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
-        operands.append(dst)
-        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
-    if m_mode == "dense":
-        if pad:
-            measure = jnp.concatenate([measure, jnp.zeros(pad, jnp.float32)])
-        operands.append(measure)
-        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
-    elif m_mode in ("packed", "dict"):
-        operands.append(_block_words(measure, m_width, n_blocks))
-        in_specs.append(
-            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, m_width), lambda i: (i, 0))
-        )
-        if m_mode == "dict":
-            operands.append(mdict)
-            in_specs.append(pl.BlockSpec(mdict.shape, lambda i: (0,)))  # resident
-    elif m_mode != "none":
-        raise ValueError(f"unknown measure mode {m_mode!r}")
-
+    operands, kinds = _packed_operands(
+        weights, src_ids, dst, measure, mdict,
+        dst_width, m_mode, m_width, n_blocks, pad,
+    )
     return pl.pallas_call(
         functools.partial(_kernel_packed, n_dst, op, dst_width, m_mode, m_width),
         grid=(n_blocks,),
-        in_specs=in_specs,
+        in_specs=_scan_specs(kinds),
         out_specs=pl.BlockSpec((B, n_dst), lambda i: (0, 0)),  # accumulate
         out_shape=jax.ShapeDtypeStruct((B, n_dst), jnp.float32),
         interpret=interpret,
     )(*operands)
+
+
+def _kernel_packed_active(
+    n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs
+):
+    na_ref, bi_ref, w_ref, src_ref, dst_ref, *rest, out_ref = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    @pl.when(i < na_ref[0])
+    def _compute():
+        dst, m = _decode_block(dst_width, m_mode, m_width, dst_ref, rest)
+        prod = _edge_product_batched(w_ref[...], src_ref[...], m, op)
+        blk = _segment_combine_batched(prod, dst, n_dst, op)
+        out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_dst", "op", "dst_width", "m_mode", "m_width", "interpret"),
+)
+def fragment_spmm_packed_active(
+    weights: jnp.ndarray,  # f32[B, n_src]
+    src_ids: jnp.ndarray,
+    dst: jnp.ndarray,
+    measure: jnp.ndarray | None,
+    mdict: jnp.ndarray | None,
+    block_idx: jnp.ndarray,  # i32[C] — union of the B queries' active blocks
+    n_active: jnp.ndarray,  # i32[1]
+    n_dst: int,
+    dst_width: int = 0,
+    m_mode: str = "none",
+    m_width: int = 0,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Frontier-sparsity decode-fused batched hop: only surviving blocks are
+    DMA'd and decoded, each serving all B rows. Bit-identical to
+    :func:`fragment_spmm_packed`."""
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    B = weights.shape[0]
+    E = src_ids.shape[0]
+    if E == 0:
+        return jnp.full((B, n_dst), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    n_blocks = max(1, (E + pad) // EDGE_BLOCK)
+    operands, kinds = _packed_operands(
+        weights, src_ids, dst, measure, mdict,
+        dst_width, m_mode, m_width, n_blocks, pad,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(block_idx.shape[0],),
+        in_specs=_active_specs(kinds),
+        out_specs=pl.BlockSpec((B, n_dst), lambda i, na, bi: (0, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(
+            _kernel_packed_active, n_dst, op, dst_width, m_mode, m_width
+        ),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, n_dst), jnp.float32),
+        interpret=interpret,
+    )(n_active, block_idx, *operands)

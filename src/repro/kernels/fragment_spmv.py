@@ -26,6 +26,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .params import EDGE_BLOCK  # shared block geometry (kernels/params.py)
 
@@ -112,3 +113,73 @@ def fragment_spmv(
         out_shape=jax.ShapeDtypeStruct((n_dst,), jnp.float32),
         interpret=interpret,
     )(weights, src_ids, dst_ids, measures)
+
+
+# ---------------------------------------------------------------------------
+# Active-block (frontier-sparsity) variant — scalar-prefetch block skipping
+# ---------------------------------------------------------------------------
+
+
+def _kernel_active(n_dst: int, op: str, na_ref, bi_ref,
+                   w_ref, src_ref, dst_ref, m_ref, out_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    @pl.when(i < na_ref[0])
+    def _compute():
+        prod = _edge_product(w_ref[...], src_ref[...], m_ref[...], op)
+        blk = _segment_combine(prod, dst_ref[...], n_dst, op)
+        out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+@functools.partial(jax.jit, static_argnames=("n_dst", "op", "interpret"))
+def fragment_spmv_active(
+    weights: jnp.ndarray,
+    src_ids: jnp.ndarray,
+    dst_ids: jnp.ndarray,
+    measures: jnp.ndarray,
+    block_idx: jnp.ndarray,  # int32[C] — surviving block ids, tail repeats last
+    n_active: jnp.ndarray,  # int32[1]
+    n_dst: int,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Frontier-sparsity SpMV: only the blocks named by ``block_idx`` are ever
+    DMA'd from HBM. ``block_idx``/``n_active`` ride in SMEM via
+    ``pltpu.PrefetchScalarGridSpec`` and drive the edge-array ``index_map``;
+    grid steps past ``n_active`` revisit the last active block (no new DMA) and
+    skip the compute under ``pl.when``. Per-block math and ⊕-combine order are
+    identical to :func:`fragment_spmv`, and every skipped block's contribution
+    is the ⊕-identity, so results are bit-identical to the full scan
+    (see kernels/active.py)."""
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    E = src_ids.shape[0]
+    if E == 0:
+        return jnp.full((n_dst,), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    if pad:
+        src_ids = jnp.concatenate([src_ids, jnp.full(pad, weights.shape[0], jnp.int32)])
+        dst_ids = jnp.concatenate([dst_ids, jnp.zeros(pad, jnp.int32)])
+        measures = jnp.concatenate([measures, jnp.zeros(pad, jnp.float32)])
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,  # (n_active, block_idx) land in SMEM
+        grid=(block_idx.shape[0],),
+        in_specs=[
+            pl.BlockSpec(weights.shape, lambda i, na, bi: (0,)),  # resident
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)),
+            pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)),
+        ],
+        out_specs=pl.BlockSpec((n_dst,), lambda i, na, bi: (0,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_active, n_dst, op),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst,), jnp.float32),
+        interpret=interpret,
+    )(n_active, block_idx, weights, src_ids, dst_ids, measures)

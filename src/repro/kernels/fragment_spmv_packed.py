@@ -29,6 +29,14 @@ Padding: ``src`` pads past the frontier (gather fills the ⊕-identity, which
 zeroes the edge product under every op); packed streams pad with zero words —
 trailing bits of a partial word are already zero in the `_pack_words` layout,
 so padding values decode to 0 and land on dst 0 with identity weight.
+
+:func:`fragment_spmv_packed_active` is the frontier-sparsity variant
+(kernels/active.py): the surviving-block list rides in SMEM via
+``pltpu.PrefetchScalarGridSpec`` and drives every stream's ``index_map``, so
+only active blocks are DMA'd *or decoded* — skipping saves the BCA unpack work
+too. The operand layout (:func:`_packed_operands`) and per-block decode
+(:func:`_decode_block`) are shared across the scan/active × SpMV/SpMM packed
+kernels so the four paths cannot drift.
 """
 from __future__ import annotations
 
@@ -37,6 +45,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from .bitunpack import GROUP, decode_groups
 from .fragment_spmv import (
@@ -50,13 +59,10 @@ from .params import EDGE_BLOCK
 GROUPS_PER_EDGE_BLOCK = EDGE_BLOCK // GROUP  # 128 groups of 32 values
 
 
-def _kernel(n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs):
-    w_ref, src_ref, dst_ref, *rest, out_ref = refs
-
-    @pl.when(pl.program_id(0) == 0)
-    def _init():
-        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
-
+def _decode_block(dst_width: int, m_mode: str, m_width: int, dst_ref, rest):
+    """One edge block's (dst, measure) from the refs, decoding packed streams
+    in VMEM. Shared by all four packed kernel bodies (scan/active × SpMV/SpMM)
+    so the mode dispatch cannot drift between them."""
     if dst_width:
         dst = decode_groups(dst_ref[...], dst_width).reshape(-1)
     else:
@@ -71,7 +77,17 @@ def _kernel(n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *ref
             m = jnp.take(rest[1][...], idx)
         else:
             m = idx.astype(jnp.float32)
+    return dst, m
 
+
+def _kernel(n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs):
+    w_ref, src_ref, dst_ref, *rest, out_ref = refs
+
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    dst, m = _decode_block(dst_width, m_mode, m_width, dst_ref, rest)
     prod = _edge_product(w_ref[...], src_ref[...], m, op)
     blk = _segment_combine(prod, dst, n_dst, op)
     out_ref[...] = _combine(out_ref[...], blk, op)
@@ -83,6 +99,83 @@ def _block_words(words: jnp.ndarray, width: int, n_blocks: int) -> jnp.ndarray:
     if words.shape[0] < need:
         words = jnp.concatenate([words, jnp.zeros(need - words.shape[0], jnp.uint32)])
     return words[:need].reshape(n_blocks * GROUPS_PER_EDGE_BLOCK, width)
+
+
+def _packed_operands(
+    weights, src_ids, dst, measure, mdict,
+    dst_width: int, m_mode: str, m_width: int, n_blocks: int, pad: int,
+):
+    """Operand list + spec kinds for the packed kernels, shared by the scan and
+    active variants of both the SpMV and the SpMM. Kinds: ``('resident',
+    block_shape)`` (whole array, every grid step) | ``'edge'`` (EDGE_BLOCK
+    stream) | ``('words', width)`` (packed word stream, (G, width) blocks)."""
+    n_src = weights.shape[-1]
+    if pad:
+        src_ids = jnp.concatenate([src_ids, jnp.full(pad, n_src, jnp.int32)])
+    operands = [weights, src_ids]
+    kinds = [("resident", weights.shape), "edge"]
+    if dst_width:
+        operands.append(_block_words(dst, dst_width, n_blocks))
+        kinds.append(("words", dst_width))
+    else:
+        if pad:
+            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
+        operands.append(dst)
+        kinds.append("edge")
+    if m_mode == "dense":
+        if pad:
+            measure = jnp.concatenate([measure, jnp.zeros(pad, jnp.float32)])
+        operands.append(measure)
+        kinds.append("edge")
+    elif m_mode in ("packed", "dict"):
+        operands.append(_block_words(measure, m_width, n_blocks))
+        kinds.append(("words", m_width))
+        if m_mode == "dict":
+            operands.append(mdict)
+            kinds.append(("resident", mdict.shape))
+    elif m_mode != "none":
+        raise ValueError(f"unknown measure mode {m_mode!r}")
+    return operands, kinds
+
+
+def _scan_specs(kinds) -> list[pl.BlockSpec]:
+    """BlockSpecs for the sequential scan: grid step i streams block i."""
+    specs = []
+    for k in kinds:
+        if k == "edge":
+            specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
+        elif k[0] == "resident":
+            shape = k[1]
+            specs.append(
+                pl.BlockSpec(shape, lambda i, _z=(0,) * len(shape): _z)
+            )
+        else:  # ('words', width)
+            specs.append(
+                pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, k[1]), lambda i: (i, 0))
+            )
+    return specs
+
+
+def _active_specs(kinds) -> list[pl.BlockSpec]:
+    """BlockSpecs for the active-block variant: the SMEM-prefetched block list
+    (``bi``) drives every stream's index map — grid step i fetches block
+    ``bi[i]``; resident operands ignore it."""
+    specs = []
+    for k in kinds:
+        if k == "edge":
+            specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i, na, bi: (bi[i],)))
+        elif k[0] == "resident":
+            shape = k[1]
+            specs.append(
+                pl.BlockSpec(shape, lambda i, na, bi, _z=(0,) * len(shape): _z)
+            )
+        else:  # ('words', width)
+            specs.append(
+                pl.BlockSpec(
+                    (GROUPS_PER_EDGE_BLOCK, k[1]), lambda i, na, bi: (bi[i], 0)
+                )
+            )
+    return specs
 
 
 @functools.partial(
@@ -109,47 +202,80 @@ def fragment_spmv_packed(
         return jnp.full((n_dst,), IDENTITY[op], jnp.float32)
     pad = (-E) % EDGE_BLOCK
     n_blocks = max(1, (E + pad) // EDGE_BLOCK)
-    if pad:
-        src_ids = jnp.concatenate(
-            [src_ids, jnp.full(pad, weights.shape[0], jnp.int32)]
-        )
-
-    operands = [weights, src_ids]
-    in_specs = [
-        pl.BlockSpec(weights.shape, lambda i: (0,)),  # frontier resident
-        pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)),
-    ]
-    if dst_width:
-        operands.append(_block_words(dst, dst_width, n_blocks))
-        in_specs.append(
-            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, dst_width), lambda i: (i, 0))
-        )
-    else:
-        if pad:
-            dst = jnp.concatenate([dst, jnp.zeros(pad, jnp.int32)])
-        operands.append(dst)
-        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
-    if m_mode == "dense":
-        if pad:
-            measure = jnp.concatenate([measure, jnp.zeros(pad, jnp.float32)])
-        operands.append(measure)
-        in_specs.append(pl.BlockSpec((EDGE_BLOCK,), lambda i: (i,)))
-    elif m_mode in ("packed", "dict"):
-        operands.append(_block_words(measure, m_width, n_blocks))
-        in_specs.append(
-            pl.BlockSpec((GROUPS_PER_EDGE_BLOCK, m_width), lambda i: (i, 0))
-        )
-        if m_mode == "dict":
-            operands.append(mdict)
-            in_specs.append(pl.BlockSpec(mdict.shape, lambda i: (0,)))  # resident
-    elif m_mode != "none":
-        raise ValueError(f"unknown measure mode {m_mode!r}")
-
+    operands, kinds = _packed_operands(
+        weights, src_ids, dst, measure, mdict,
+        dst_width, m_mode, m_width, n_blocks, pad,
+    )
     return pl.pallas_call(
         functools.partial(_kernel, n_dst, op, dst_width, m_mode, m_width),
         grid=(n_blocks,),
-        in_specs=in_specs,
+        in_specs=_scan_specs(kinds),
         out_specs=pl.BlockSpec((n_dst,), lambda i: (0,)),  # accumulate over grid
         out_shape=jax.ShapeDtypeStruct((n_dst,), jnp.float32),
         interpret=interpret,
     )(*operands)
+
+
+def _kernel_active(
+    n_dst: int, op: str, dst_width: int, m_mode: str, m_width: int, *refs
+):
+    na_ref, bi_ref, w_ref, src_ref, dst_ref, *rest, out_ref = refs
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, IDENTITY[op])
+
+    @pl.when(i < na_ref[0])
+    def _compute():
+        dst, m = _decode_block(dst_width, m_mode, m_width, dst_ref, rest)
+        prod = _edge_product(w_ref[...], src_ref[...], m, op)
+        blk = _segment_combine(prod, dst, n_dst, op)
+        out_ref[...] = _combine(out_ref[...], blk, op)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("n_dst", "op", "dst_width", "m_mode", "m_width", "interpret"),
+)
+def fragment_spmv_packed_active(
+    weights: jnp.ndarray,
+    src_ids: jnp.ndarray,
+    dst: jnp.ndarray,
+    measure: jnp.ndarray | None,
+    mdict: jnp.ndarray | None,
+    block_idx: jnp.ndarray,  # int32[C] — surviving block ids
+    n_active: jnp.ndarray,  # int32[1]
+    n_dst: int,
+    dst_width: int = 0,
+    m_mode: str = "none",
+    m_width: int = 0,
+    op: str = "sum",
+    interpret: bool = False,
+) -> jnp.ndarray:
+    """Frontier-sparsity decode-fused SpMV: only surviving blocks are DMA'd
+    and decoded. Same operand layout and per-block math as
+    :func:`fragment_spmv_packed` → bit-identical results."""
+    if op not in IDENTITY:
+        raise ValueError(f"unknown combine op {op!r}")
+    E = src_ids.shape[0]
+    if E == 0:
+        return jnp.full((n_dst,), IDENTITY[op], jnp.float32)
+    pad = (-E) % EDGE_BLOCK
+    n_blocks = max(1, (E + pad) // EDGE_BLOCK)
+    operands, kinds = _packed_operands(
+        weights, src_ids, dst, measure, mdict,
+        dst_width, m_mode, m_width, n_blocks, pad,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(block_idx.shape[0],),
+        in_specs=_active_specs(kinds),
+        out_specs=pl.BlockSpec((n_dst,), lambda i, na, bi: (0,)),
+    )
+    return pl.pallas_call(
+        functools.partial(_kernel_active, n_dst, op, dst_width, m_mode, m_width),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_dst,), jnp.float32),
+        interpret=interpret,
+    )(n_active, block_idx, *operands)

@@ -3,24 +3,96 @@
 On the CPU container the kernels execute via ``interpret=True`` (Pallas body run
 as Python/XLA — the correctness validation mode mandated for this environment);
 on TPU they run compiled. ``use_pallas=False`` selects the pure-XLA fallback
-(identical math from :mod:`repro.kernels.ref`)."""
+(identical math from :mod:`repro.kernels.ref`).
+
+Frontier-sparsity dispatch (kernels/active.py): the four hop entries accept
+``blocks=(src_min, src_max)`` per-block metadata and a ``block_skipping`` mode
+('off' | 'on' | 'auto'). With metadata present and skipping engaged, the call
+routes to the scalar-prefetch ``*_active`` kernel so only blocks whose src
+range intersects the frontier's support are streamed. Two tiers:
+
+  * **eager** (concrete frontier — kernel-level callers, benchmarks): the
+    active list is computed in numpy, the capacity bucketed to a power of two,
+    and the grid *really* shrinks; 'auto' bails back to the scan when the
+    surviving fraction exceeds ``SKIP_BLOCK_FRACTION``.
+  * **traced** (frontier is a jit tracer — the executor's compiled hop chain):
+    the list is computed in-graph at full capacity (static shapes), inactive
+    grid steps are ``pl.when``-guarded no-DMA no-ops; 'auto' wraps the choice
+    in a runtime ``lax.cond`` on the surviving-block count.
+
+Skipping is bit-identical to the scan for every op (skipped contributions are
+the ⊕-identity); the XLA fallback always full-scans, which is the same result.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from . import active as _active
 from . import ref
 from .bitmap_ops import bitmap_and as _bitmap_and
 from .bitmap_ops import bitmap_and_popcount as _bitmap_and_popcount
 from .bitunpack import bitunpack as _bitunpack
 from .fragment_spmm import fragment_spmm as _fragment_spmm
+from .fragment_spmm import fragment_spmm_active as _fragment_spmm_active
 from .fragment_spmm import fragment_spmm_packed as _fragment_spmm_packed
+from .fragment_spmm import fragment_spmm_packed_active as _fragment_spmm_packed_active
+from .fragment_spmv import IDENTITY as _IDENTITY
 from .fragment_spmv import fragment_spmv as _fragment_spmv
+from .fragment_spmv import fragment_spmv_active as _fragment_spmv_active
 from .fragment_spmv_packed import fragment_spmv_packed as _fragment_spmv_packed
+from .fragment_spmv_packed import (
+    fragment_spmv_packed_active as _fragment_spmv_packed_active,
+)
+
+BLOCK_SKIPPING_MODES = ("off", "on", "auto")
 
 
 def _interpret() -> bool:
     return jax.default_backend() != "tpu"
+
+
+def _plan_skip(w, op: str, E: int, blocks, block_skipping: str):
+    """Decide scan vs skip for one hop. ``None`` → full scan; otherwise
+    ``(block_idx, n_active, mode)`` with mode 'static' (commit to the active
+    kernel now) or 'cond' (traced 'auto': pick at runtime via lax.cond)."""
+    if block_skipping not in BLOCK_SKIPPING_MODES:
+        raise ValueError(f"unknown block_skipping mode {block_skipping!r}")
+    if block_skipping == "off" or blocks is None or E == 0:
+        return None
+    nb = _active.n_edge_blocks(E)
+    if nb <= 1 and block_skipping != "on":
+        # nothing to skip on a 1-block index; 'on' still engages the active
+        # kernel so small shapes exercise the real code path
+        return None
+    src_min, src_max = blocks
+    zero = _IDENTITY[op]
+    if isinstance(w, jax.core.Tracer):
+        bi, na = _active.active_block_list(
+            w, zero, jnp.asarray(src_min), jnp.asarray(src_max)
+        )
+        return bi, na, ("cond" if block_skipping == "auto" else "static")
+    support = np.asarray(w != zero)
+    if support.ndim == 2:
+        support = support.any(axis=0)
+    bi, na, frac = _active.active_block_list_np(support, src_min, src_max)
+    if block_skipping == "auto" and frac > _active.SKIP_BLOCK_FRACTION:
+        return None
+    return jnp.asarray(bi), jnp.asarray(na), "static"
+
+
+def _skip_or_cond(plan, E: int, skip_fn, scan_fn):
+    """Commit to the active kernel ('static') or build the runtime choice
+    (traced 'auto'): lax.cond on the surviving-block count vs the
+    SKIP_BLOCK_FRACTION threshold — both branches return identical values."""
+    bi, na, mode = plan
+    if mode == "static":
+        return skip_fn(bi, na)
+    thresh = max(1, int(_active.SKIP_BLOCK_FRACTION * _active.n_edge_blocks(E)))
+    return jax.lax.cond(
+        na[0] <= thresh, lambda: skip_fn(bi, na), scan_fn
+    )
 
 
 def bitunpack(packed, width: int, count: int, use_pallas: bool = True):
@@ -30,18 +102,30 @@ def bitunpack(packed, width: int, count: int, use_pallas: bool = True):
 
 
 def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int,
-                  op: str = "sum", use_pallas: bool = True):
+                  op: str = "sum", use_pallas: bool = True,
+                  blocks=None, block_skipping: str = "off"):
     w = jnp.asarray(weights, jnp.float32)
     s = jnp.asarray(src_ids, jnp.int32)
     d = jnp.asarray(dst_ids, jnp.int32)
     m = jnp.asarray(measures, jnp.float32)
     if not use_pallas:
         return ref.fragment_spmv_ref(w, s, d, m, n_dst, op=op)
-    return _fragment_spmv(w, s, d, m, n_dst, op=op, interpret=_interpret())
+    scan = lambda: _fragment_spmv(w, s, d, m, n_dst, op=op, interpret=_interpret())
+    plan = _plan_skip(w, op, s.shape[0], blocks, block_skipping)
+    if plan is None:
+        return scan()
+    return _skip_or_cond(
+        plan, s.shape[0],
+        lambda bi, na: _fragment_spmv_active(
+            w, s, d, m, bi, na, n_dst, op=op, interpret=_interpret()
+        ),
+        scan,
+    )
 
 
 def fragment_spmm(weights, src_ids, dst_ids, measures, n_dst: int,
-                  op: str = "sum", use_pallas: bool = True):
+                  op: str = "sum", use_pallas: bool = True,
+                  blocks=None, block_skipping: str = "off"):
     """Batched multi-query hop: ``Y[b, dst] ⊕= W[b, src] ⊗ m`` with one edge
     stream serving all B frontier rows (see fragment_spmm.py). ``measures``
     may be [E] (shared — the fused-kernel case) or [B, E] (per-row, e.g. a
@@ -54,13 +138,24 @@ def fragment_spmm(weights, src_ids, dst_ids, measures, n_dst: int,
     m = jnp.asarray(measures, jnp.float32)
     if m.ndim == 2 or not use_pallas:
         return ref.fragment_spmm_ref(w, s, d, m, n_dst, op=op)
-    return _fragment_spmm(w, s, d, m, n_dst, op=op, interpret=_interpret())
+    scan = lambda: _fragment_spmm(w, s, d, m, n_dst, op=op, interpret=_interpret())
+    plan = _plan_skip(w, op, s.shape[0], blocks, block_skipping)
+    if plan is None:
+        return scan()
+    return _skip_or_cond(
+        plan, s.shape[0],
+        lambda bi, na: _fragment_spmm_active(
+            w, s, d, m, bi, na, n_dst, op=op, interpret=_interpret()
+        ),
+        scan,
+    )
 
 
 def fragment_spmm_packed(weights, src_ids, dst, measure=None, mdict=None, *,
                          n_dst: int, dst_width: int = 0, m_mode: str = "none",
                          m_width: int = 0, op: str = "sum",
-                         use_pallas: bool = True):
+                         use_pallas: bool = True,
+                         blocks=None, block_skipping: str = "off"):
     """Decode-fused batched hop: packed dst/measure word streams decode once
     per 4096-edge block in VMEM and serve all B frontier rows."""
     w = jnp.asarray(weights, jnp.float32)
@@ -77,16 +172,28 @@ def fragment_spmm_packed(weights, src_ids, dst, measure=None, mdict=None, *,
             w, s, d, m, md, n_dst, dst_width=dst_width,
             m_mode=m_mode, m_width=m_width, op=op,
         )
-    return _fragment_spmm_packed(
+    scan = lambda: _fragment_spmm_packed(
         w, s, d, m, md, n_dst, dst_width=dst_width,
         m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
+    )
+    plan = _plan_skip(w, op, s.shape[0], blocks, block_skipping)
+    if plan is None:
+        return scan()
+    return _skip_or_cond(
+        plan, s.shape[0],
+        lambda bi, na: _fragment_spmm_packed_active(
+            w, s, d, m, md, bi, na, n_dst, dst_width=dst_width,
+            m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
+        ),
+        scan,
     )
 
 
 def fragment_spmv_packed(weights, src_ids, dst, measure=None, mdict=None, *,
                          n_dst: int, dst_width: int = 0, m_mode: str = "none",
                          m_width: int = 0, op: str = "sum",
-                         use_pallas: bool = True):
+                         use_pallas: bool = True,
+                         blocks=None, block_skipping: str = "off"):
     """Decode-fused hop: ``dst``/``measure`` may be BCA word streams that are
     unpacked block-at-a-time inside the SpMV (see fragment_spmv_packed.py)."""
     w = jnp.asarray(weights, jnp.float32)
@@ -103,9 +210,20 @@ def fragment_spmv_packed(weights, src_ids, dst, measure=None, mdict=None, *,
             w, s, d, m, md, n_dst, dst_width=dst_width,
             m_mode=m_mode, m_width=m_width, op=op,
         )
-    return _fragment_spmv_packed(
+    scan = lambda: _fragment_spmv_packed(
         w, s, d, m, md, n_dst, dst_width=dst_width,
         m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
+    )
+    plan = _plan_skip(w, op, s.shape[0], blocks, block_skipping)
+    if plan is None:
+        return scan()
+    return _skip_or_cond(
+        plan, s.shape[0],
+        lambda bi, na: _fragment_spmv_packed_active(
+            w, s, d, m, md, bi, na, n_dst, dst_width=dst_width,
+            m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
+        ),
+        scan,
     )
 
 

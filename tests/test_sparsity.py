@@ -1,0 +1,300 @@
+"""Frontier-sparsity block skipping: skipped == full-scan, bit-identically.
+
+Covers the active-block machinery (kernels/active.py), the scalar-prefetch
+kernel variants (fragment_spmv{,_packed}_active, fragment_spmm{,_packed}_active)
+through the ops dispatch, and the engine surface (prepare(block_skipping=...),
+explain()). Bit-identity — np.array_equal, not allclose — is the contract:
+a skipped block's contribution is the ⊕-identity, so the skip and scan paths
+must produce the same floats for every semiring.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fragments import _pack_words
+from repro.kernels import active, ops
+from repro.kernels.params import EDGE_BLOCK
+
+N_DST = 256
+OPS = ["sum", "min", "max", "bool"]  # SUM/COUNT, MIN, MAX, EXISTS semirings
+ZERO = {"sum": 0.0, "min": np.inf, "max": -np.inf, "bool": 0.0}
+
+
+@pytest.fixture(scope="module")
+def edges():
+    """4-block CSR edge set with a degree-0 gap: sources 3000..3999 have no
+    edges, so some block's [src_min, src_max] range straddles ids that never
+    occur — a support landing only in the gap activates the block but must
+    contribute exactly the ⊕-identity."""
+    rng = np.random.default_rng(42)
+    n_src = 8192
+    deg = np.full(n_src, 2, np.int64)
+    deg[3000:4000] = 0  # the gap
+    deg[:100] = 40  # head-heavy: first block is mostly sources 0..100
+    E = int(deg.sum())
+    pad = (-E) % EDGE_BLOCK
+    deg[n_src - 1] += pad  # make E a block multiple so boundaries are exact
+    src = np.repeat(np.arange(n_src, dtype=np.int32), deg)
+    E = src.shape[0]
+    dst = rng.integers(0, N_DST, E).astype(np.int32)
+    m = (rng.random(E) * 9 + 1).astype(np.float32)  # measures > 0
+    return n_src, src, dst, m
+
+
+@pytest.fixture(scope="module")
+def blocks(edges):
+    _, src, _, _ = edges
+    return active.block_ranges(src)
+
+
+def frontier(n_src, sl, op="sum"):
+    w = np.full(n_src, ZERO[op], np.float32)
+    w[sl] = 1.5
+    return w
+
+
+def scan_vs_skip(w, edges, blocks, op, mode):
+    _, src, dst, m = edges
+    ref = np.asarray(ops.fragment_spmv(w, src, dst, m, N_DST, op=op))
+    got = np.asarray(ops.fragment_spmv(
+        w, src, dst, m, N_DST, op=op, blocks=blocks, block_skipping=mode
+    ))
+    np.testing.assert_array_equal(ref, got)
+    return ref
+
+
+# ---------------------------------------------------------------------------
+# metadata + compaction unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_block_ranges_partition(edges, blocks):
+    _, src, _, _ = edges
+    src_min, src_max = blocks
+    nb = active.n_edge_blocks(src.shape[0])
+    assert src_min.shape == (nb,) == src_max.shape
+    assert (src_min <= src_max).all()
+    assert (src_min[1:] >= src_max[:-1]).all()  # CSR order ⇒ monotone ranges
+    assert src_min[0] == src[0] and src_max[-1] == src[-1]
+
+
+def test_block_ranges_empty_relation():
+    src_min, src_max = active.block_ranges(np.zeros(0, np.int64))
+    # sentinel range intersects no support
+    assert src_max[0] < src_min[0]
+
+
+def test_compact_blocks_fixed_capacity():
+    flags = jnp.asarray([False, True, False, True, True, False])
+    idx, n = active.compact_blocks(flags)
+    assert int(n[0]) == 3
+    np.testing.assert_array_equal(np.asarray(idx), [1, 3, 4, 4, 4, 4])
+    # empty: count 0, tail points at a valid block (0)
+    idx0, n0 = active.compact_blocks(jnp.zeros(4, bool))
+    assert int(n0[0]) == 0 and set(np.asarray(idx0)) == {0}
+
+
+def test_bucket_capacity_powers_of_two():
+    assert active.bucket_capacity(0, 256) == 1
+    assert active.bucket_capacity(1, 256) == 1
+    assert active.bucket_capacity(3, 256) == 4
+    assert active.bucket_capacity(5, 256) == 8
+    assert active.bucket_capacity(300, 256) == 256
+
+
+# ---------------------------------------------------------------------------
+# dense SpMV: frontier patterns × semirings, eager and traced
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", OPS)
+@pytest.mark.parametrize("mode", ["on", "auto"])
+def test_spmv_patterns_bit_identical(edges, blocks, op, mode):
+    n_src, src, _, _ = edges
+    patterns = {
+        "empty": slice(0, 0),
+        "first_block": slice(0, 3),  # heads live in block 0
+        "last_block": slice(n_src - 2, n_src),
+        "gap_only": slice(3200, 3400),  # degree-0 sources inside a block range
+        "middle": slice(5000, 5200),
+        "all_active": slice(0, n_src),
+    }
+    for name, sl in patterns.items():
+        ref = scan_vs_skip(frontier(n_src, sl, op), edges, blocks, op, mode)
+        if name == "empty" or name == "gap_only":
+            assert (ref == ZERO[op]).all(), name
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_spmv_traced_tier(edges, blocks, op):
+    """Same bit-identity when the frontier is a jit tracer (the executor's
+    compiled-chain tier: fixed-capacity list, pl.when-guarded grid)."""
+    n_src, src, dst, m = edges
+    w = frontier(n_src, slice(100, 130), op)
+    ref = np.asarray(ops.fragment_spmv(w, src, dst, m, N_DST, op=op))
+    for mode in ("on", "auto"):
+        f = jax.jit(
+            lambda w: ops.fragment_spmv(
+                w, src, dst, m, N_DST, op=op, blocks=blocks, block_skipping=mode
+            )
+        )
+        np.testing.assert_array_equal(ref, np.asarray(f(jnp.asarray(w))))
+
+
+def test_spmv_off_and_missing_blocks_scan(edges, blocks):
+    n_src, src, dst, m = edges
+    w = frontier(n_src, slice(0, 10))
+    ref = np.asarray(ops.fragment_spmv(w, src, dst, m, N_DST, op="sum"))
+    off = np.asarray(ops.fragment_spmv(
+        w, src, dst, m, N_DST, op="sum", blocks=blocks, block_skipping="off"
+    ))
+    none = np.asarray(ops.fragment_spmv(
+        w, src, dst, m, N_DST, op="sum", blocks=None, block_skipping="auto"
+    ))
+    np.testing.assert_array_equal(ref, off)
+    np.testing.assert_array_equal(ref, none)
+
+
+def test_spmv_rejects_unknown_mode(edges, blocks):
+    n_src, src, dst, m = edges
+    with pytest.raises(ValueError, match="block_skipping"):
+        ops.fragment_spmv(
+            frontier(n_src, slice(0, 4)), src, dst, m, N_DST,
+            blocks=blocks, block_skipping="maybe",
+        )
+
+
+# ---------------------------------------------------------------------------
+# decode-fused (packed / dict) SpMV
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m_mode", ["none", "dense", "packed", "dict"])
+@pytest.mark.parametrize("op", ["sum", "min"])
+def test_spmv_packed_bit_identical(edges, blocks, m_mode, op):
+    n_src, src, dst, m = edges
+    rng = np.random.default_rng(7)
+    dw = int(N_DST - 1).bit_length()
+    words_dst = _pack_words(dst, dw)
+    midx = rng.integers(0, 32, src.shape[0]).astype(np.int32)
+    mdict = (rng.random(32) * 5 + 1).astype(np.float32)
+    words_m = _pack_words(midx, 5)
+    meas = {"none": None, "dense": m, "packed": words_m, "dict": words_m}[m_mode]
+    mw = 5 if m_mode in ("packed", "dict") else 0
+    md = mdict if m_mode == "dict" else None
+    kw = dict(n_dst=N_DST, dst_width=dw, m_mode=m_mode, m_width=mw, op=op)
+    for sl in (slice(0, 5), slice(3200, 3300), slice(n_src - 3, n_src)):
+        w = frontier(n_src, sl, op)
+        ref = np.asarray(ops.fragment_spmv_packed(w, src, words_dst, meas, md, **kw))
+        got = np.asarray(ops.fragment_spmv_packed(
+            w, src, words_dst, meas, md, blocks=blocks, block_skipping="on", **kw
+        ))
+        np.testing.assert_array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# batched SpMM: union-of-supports block list
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("op", OPS)
+def test_spmm_union_bit_identical(edges, blocks, op):
+    n_src, src, dst, m = edges
+    W = np.stack([
+        frontier(n_src, slice(0, 4), op),  # block 0
+        frontier(n_src, slice(n_src - 4, n_src), op),  # last block
+        frontier(n_src, slice(0, 0), op),  # dead row
+        frontier(n_src, slice(3200, 3300), op),  # gap-only row
+    ])
+    ref = np.asarray(ops.fragment_spmm(W, src, dst, m, N_DST, op=op))
+    for mode in ("on", "auto"):
+        got = np.asarray(ops.fragment_spmm(
+            W, src, dst, m, N_DST, op=op, blocks=blocks, block_skipping=mode
+        ))
+        np.testing.assert_array_equal(ref, got)
+    assert (ref[2] == ZERO[op]).all()  # dead row stays at the identity
+
+
+def test_spmm_packed_bit_identical(edges, blocks):
+    n_src, src, dst, m = edges
+    dw = int(N_DST - 1).bit_length()
+    words_dst = _pack_words(dst, dw)
+    W = np.stack([frontier(n_src, slice(i * 16, i * 16 + 8)) for i in range(4)])
+    kw = dict(n_dst=N_DST, dst_width=dw, m_mode="dense", op="sum")
+    ref = np.asarray(ops.fragment_spmm_packed(W, src, words_dst, m, None, **kw))
+    got = np.asarray(ops.fragment_spmm_packed(
+        W, src, words_dst, m, None, blocks=blocks, block_skipping="on", **kw
+    ))
+    np.testing.assert_array_equal(ref, got)
+
+
+# ---------------------------------------------------------------------------
+# engine surface: modes agree end-to-end across aggregates + explain()
+# ---------------------------------------------------------------------------
+
+Q_SCORE = """
+SELECT dt2.Doc, {agg}(dt1.Fre * dt2.Fre)
+FROM DT dt1 JOIN DT dt2 ON dt1.Term = dt2.Term
+WHERE dt1.Doc = :d0
+GROUP BY dt2.ID
+"""
+
+
+@pytest.fixture(scope="module")
+def engine():
+    from repro.core.engine import GQFastDatabase, GQFastEngine
+    from repro.data import synth_graph as SG
+
+    pm = SG.make_pubmed(n_docs=1500, n_terms=80, n_authors=400, seed=5)
+    return GQFastEngine(GQFastDatabase(pm, account_space=False))
+
+
+@pytest.mark.parametrize(
+    "agg", ["SUM", "COUNT", "MIN", "MAX", "AVG", "EXISTS"]
+)
+def test_engine_modes_bit_identical(engine, agg):
+    call = "COUNT(*)" if agg == "COUNT" else (
+        "EXISTS(*)" if agg == "EXISTS" else f"{agg}(dt1.Fre * dt2.Fre)"
+    )
+    q = Q_SCORE.format(agg="SUM").replace("SUM(dt1.Fre * dt2.Fre)", call)
+    res = {
+        mode: engine.prepare(q, block_skipping=mode)(d0=7)
+        for mode in ("off", "on", "auto")
+    }
+    np.testing.assert_array_equal(res["off"], res["on"])
+    np.testing.assert_array_equal(res["off"], res["auto"])
+    assert (res["off"] != 0).any(), "degenerate test: empty result"
+
+
+def test_engine_batched_modes_bit_identical(engine):
+    q = Q_SCORE.format(agg="SUM")
+    d0 = np.arange(6)
+    off = engine.prepare(q, block_skipping="off").execute_batch(d0=d0)
+    on = engine.prepare(q, block_skipping="on").execute_batch(d0=d0)
+    np.testing.assert_array_equal(off, on)
+
+
+def test_explain_reports_strategy_and_fractions(engine):
+    pq = engine.prepare(Q_SCORE.format(agg="SUM"))
+    text = pq.explain()
+    assert "strategy: frontier" in text
+    assert "block_skipping: auto" in text
+    assert "est_active_fraction=" in text
+    assert "HopOp" in text
+    # distinct modes are distinct cache entries, not silently shared
+    assert engine.prepare(Q_SCORE.format(agg="SUM"), block_skipping="off") is not pq
+    assert engine.prepare(Q_SCORE.format(agg="SUM")) is pq
+
+
+def test_prepare_rejects_unknown_block_skipping(engine):
+    with pytest.raises(ValueError, match="block_skipping"):
+        engine.prepare(Q_SCORE.format(agg="SUM"), block_skipping="bogus")
+
+
+def test_device_db_carries_block_metadata(engine):
+    for di in engine.db.device.indexes.values():
+        E = int(di.src_ids.shape[0])
+        assert di.block_src_min is not None
+        assert di.block_src_min.shape[0] == active.n_edge_blocks(E)
+        assert (np.asarray(di.block_src_min) <= np.asarray(di.block_src_max)).all()
