@@ -34,6 +34,17 @@ def emit(name: str, us_per_call: float, derived: str = "", **extra) -> None:
     )
 
 
+# trace summaries keyed by record name — benchmarks/run.py embeds them into
+# the suite's BENCH_perf.json entry under "traces"
+TRACES: dict[str, dict] = {}
+
+
+def emit_trace(name: str, summary: dict) -> None:
+    """Attach an observability summary (per-phase / per-op timings from a
+    ``QueryProfile``) to the named benchmark record in the JSON artifact."""
+    TRACES[name] = summary
+
+
 @functools.lru_cache(maxsize=None)
 def pubmed_m():
     """PubMed-M-like: high Term fanout (MeSH-only regime)."""

@@ -12,7 +12,7 @@ from repro.core.engine import GQFastDatabase, GQFastEngine
 from repro.data import synth_graph as SG
 from repro.storage import device_space_report
 
-from .common import emit, timeit
+from .common import emit, emit_trace, timeit
 
 
 def run() -> None:
@@ -57,6 +57,20 @@ def run() -> None:
         t_l = timeit(lambda: np.asarray(pl(**params)), iters=2, warmup=1)
         emit(f"perf/{qname}/frontier_tpu_native", t_f * 1e6,
              f"faithful_ratio={t_l/t_f:.1f}")
+        # per-op observability summary, embedded into BENCH_perf.json
+        prof = pf.profile(**params)
+        emit_trace(f"perf/{qname}/frontier_tpu_native", {
+            "timing_method": prof.timing_method,
+            "total_wall_ms": round(prof.total_wall_ms, 4),
+            "per_op_self_wall_ms": prof.phase_summary(),
+            "hops": [
+                {"table": h.table,
+                 "est_active_fraction": h.est_active_fraction,
+                 "observed_active_fraction": h.observed_active_fraction,
+                 "mispredict": h.mispredict}
+                for h in prof.hops
+            ],
+        })
         emit(f"perf/{qname}/fragment_loop_paper_faithful", t_l * 1e6, "")
         pa = auto.prepare(sql)
         t_a = timeit(lambda: np.asarray(pa(**params)), iters=3)

@@ -32,8 +32,37 @@ def _write_artifact(suite: str, records: list[dict], seconds: float,
         json.dump(payload, f, indent=1)
 
 
+def _run_meta(git_sha: str | None) -> dict:
+    """Provenance stamp for a suite entry: device kind, jax version, and the
+    git SHA the caller passed in (``--git-sha=`` / ``BENCH_GIT_SHA``; only
+    falls back to asking git when neither is given)."""
+    meta: dict = {"stamped_at": time.strftime("%Y-%m-%dT%H:%M:%SZ", time.gmtime())}
+    try:
+        import jax
+
+        meta["jax_version"] = jax.__version__
+        meta["device"] = jax.devices()[0].device_kind
+        meta["backend"] = jax.default_backend()
+    except Exception as e:  # noqa: BLE001
+        meta["jax_version"] = f"unavailable: {e}"
+    sha = git_sha or os.environ.get("BENCH_GIT_SHA")
+    if not sha:
+        import subprocess
+
+        try:
+            sha = subprocess.run(
+                ["git", "rev-parse", "--short", "HEAD"],
+                capture_output=True, text=True, timeout=10, check=True,
+            ).stdout.strip()
+        except Exception:  # noqa: BLE001
+            sha = "unknown"
+    meta["git_sha"] = sha
+    return meta
+
+
 def _update_perf_summary(suite: str, records: list[dict], seconds: float,
-                         error: str | None) -> None:
+                         error: str | None, meta: dict,
+                         known_suites=()) -> None:
     summary: dict = {}
     if os.path.exists(PERF_FILE):
         try:
@@ -42,10 +71,25 @@ def _update_perf_summary(suite: str, records: list[dict], seconds: float,
         except (OSError, json.JSONDecodeError):
             summary = {}
     suites = summary.setdefault("suites", {})
+    # staleness: a suite entry is replaced wholesale (metric keys the suite no
+    # longer emits disappear), and entries for suites the harness no longer
+    # knows about are dropped entirely
+    if known_suites:
+        for stale in [k for k in suites if k not in known_suites]:
+            del suites[stale]
     entry: dict = {
         "seconds": round(seconds, 1),
+        "meta": meta,
         "metrics": {r["name"]: r["us_per_call"] for r in records if "name" in r},
     }
+    from .common import TRACES
+
+    traces = {
+        r["name"]: TRACES[r["name"]]
+        for r in records if r.get("name") in TRACES
+    }
+    if traces:
+        entry["traces"] = traces
     if error:
         entry["error"] = error
     suites[suite] = entry
@@ -81,7 +125,14 @@ def main() -> None:
     }
     from .common import RECORDS
 
-    picked = sys.argv[1:] or list(suites)
+    argv = sys.argv[1:]
+    git_sha = None
+    for a in list(argv):
+        if a.startswith("--git-sha="):
+            git_sha = a.split("=", 1)[1]
+            argv.remove(a)
+    picked = argv or list(suites)
+    meta = _run_meta(git_sha)
     failed = []
     print("name,us_per_call,derived")
     for name in picked:
@@ -95,7 +146,8 @@ def main() -> None:
             print(f"{name}/ERROR,0,{err}")
         dt = time.time() - t0
         _write_artifact(name, RECORDS[start:], dt, err)
-        _update_perf_summary(name, RECORDS[start:], dt, err)
+        _update_perf_summary(name, RECORDS[start:], dt, err, meta,
+                             known_suites=tuple(suites))
         print(f"# {name} done in {dt:.1f}s", file=sys.stderr)
     # roofline summary (if dry-run artifacts exist)
     try:

@@ -73,20 +73,26 @@ def main() -> None:
     for ls in server.latencies.values():
         ls.clear()
 
+    # sample bindings from the loaded graph's actual id domains
+    n_authors = schema.entities["Author"].size
+    n_docs = schema.entities["Document"].size
+    n_terms = schema.entities["Term"].size
+
     print(f"serving {args.requests} mixed requests…")
     rng = np.random.default_rng(0)
     for i in range(args.requests):
         kind = ["AS", "SD", "FSD", "AD", "FAD"][i % 5]
         if kind == "AS":
-            server.serve("AS", a0=int(rng.integers(0, 9_000)))
+            server.serve("AS", a0=int(rng.integers(0, n_authors)))
         elif kind in ("SD", "FSD"):
-            server.serve(kind, d0=int(rng.integers(0, args.docs)))
+            server.serve(kind, d0=int(rng.integers(0, n_docs)))
         else:
-            server.serve(kind, t1=int(rng.integers(0, 50)), t2=int(rng.integers(0, 50)))
+            server.serve(kind, t1=int(rng.integers(0, n_terms)),
+                         t2=int(rng.integers(0, n_terms)))
 
     # batched dashboard refresh: 32 author panels in one call — the SpMM
     # serving path streams each edge block once for the whole batch
-    server.serve_batch("AS", a0=rng.integers(0, 9_000, size=32))
+    server.serve_batch("AS", a0=rng.integers(0, n_authors, size=32))
     server.report()
     bt = server.latencies["AS"][-1]
     print(f"\nbatched AS ×32: {bt*1e3:.1f} ms total = {bt/32*1e3:.2f} ms/query "

@@ -11,6 +11,7 @@ from typing import Any, Callable
 
 import numpy as np
 
+from ..obs import trace as T
 from . import executor as X
 from .algebra import ChainPlan
 from .fragments import FragmentIndex, build_index
@@ -104,16 +105,45 @@ class PreparedQuery:
     strategy: str = "frontier"  # resolved (auto → the picked one)
     block_skipping: str = "auto"  # frontier-sparsity mode baked into fn
     hop_estimates: list[dict] | None = None  # per-hop selectivity estimates
+    # observability handles (DESIGN.md §Observability): the device DB for
+    # memory reports and the mesh/sharded-DB triple the distributed profiler
+    # needs to rebuild prefix executables against the same placement
+    device_db: Any = None
+    mesh: Any = None
+    shard_axes: tuple = ("data",)
+    sharded_db: Any = None
 
     def __call__(self, **params) -> np.ndarray:
         args = [params[n] for n in self.param_names]
-        return np.asarray(self.fn(*args))
+        if T.current() is None:  # the zero-overhead default path
+            return np.asarray(self.fn(*args))
+        with T.span("execute", strategy=self.strategy,
+                    query=" ".join(self.sql.split())) as sp:
+            out = sp.fence(self.fn(*args))  # kernel_ms: device-done
+            return np.asarray(out)
 
-    def explain(self) -> str:
+    def profile(self, reps: int = 3, **params) -> Any:
+        """Execute once under instrumentation and return a
+        :class:`repro.obs.profile.QueryProfile`: per-IR-op wall/kernel times,
+        predicted-vs-observed per-hop active fractions (mispredictions beyond
+        2× increment the ``strategy_mispredict`` counter), device-memory
+        report, and the fenced end-to-end median of ``reps`` runs. The profile
+        ``result`` comes from the same compiled executable ``__call__`` runs,
+        so it is bit-identical to plain execution."""
+        from ..obs.profile import profile_prepared
+
+        return profile_prepared(self, params, reps=reps)
+
+    def explain(self, analyze: bool = False, **params) -> str:
         """Human-readable execution summary: the op pipeline, the resolved
         strategy, the block-skipping mode, and per-hop estimated active
         fractions (the selectivity model behind strategy choice and the
-        skip-vs-scan heuristic, DESIGN.md §Sparsity)."""
+        skip-vs-scan heuristic, DESIGN.md §Sparsity).
+
+        ``analyze=True`` additionally executes the query once with the given
+        parameter bindings and appends the :meth:`profile` report: per-IR-op
+        wall/kernel time, predicted-vs-observed hop fractions (mispredicts
+        flagged), and the device-memory footprint — EXPLAIN ANALYZE."""
         lines = [
             f"query: {' '.join(self.sql.split())}",
             f"strategy: {self.strategy}",
@@ -128,6 +158,8 @@ class PreparedQuery:
                 f"  hop I_{h['table']}.{h['src_key']}: "
                 f"est_active_fraction={h['est_active_fraction']:.4g}"
             )
+        if analyze:
+            lines.append(self.profile(**params).render())
         return "\n".join(lines)
 
     def _batch_args(self, param_arrays: dict) -> tuple[list[np.ndarray], int]:
@@ -216,43 +248,56 @@ class GQFastEngine:
         key = (sql, self.strategy, block_skipping)
         if key in self._cache:
             return self._cache[key]
-        plan = plan_query(self.db.schema, parse(sql))
-        # lower once: every strategy interprets the same physical IR, and the
-        # per-execute mask/ref-resolution work is hoisted out of the hot path
-        phys = lower(self.db.device, plan)
-        names = list(phys.param_names)
-        bfn = None
-        if self.mesh is not None:
-            strategy = "distributed"  # skipping n/a: sharded XLA hops
-            sdb = X.shard_edges(self.db.device, self.mesh, self.shard_axes)
-            fn = X.compile_frontier_distributed(
-                self.db.device, phys, self.mesh, self.shard_axes,
-                sharded_db=sdb,
+        with T.span("prepare", query=" ".join(sql.split())):
+            with T.span("parse"):
+                ast = parse(sql)
+            with T.span("plan"):
+                plan = plan_query(self.db.schema, ast)
+            # lower once: every strategy interprets the same physical IR, and
+            # the per-execute mask/ref-resolution work is hoisted out of the
+            # hot path
+            with T.span("lower"):
+                phys = lower(self.db.device, plan)
+            names = list(phys.param_names)
+            bfn, sdb = None, None
+            # the compile span covers executable construction; jax traces and
+            # XLA-compiles lazily, so the first execute span absorbs that cost
+            with T.span("compile") as csp:
+                if self.mesh is not None:
+                    strategy = "distributed"  # skipping n/a: sharded XLA hops
+                    sdb = X.shard_edges(self.db.device, self.mesh, self.shard_axes)
+                    fn = X.compile_frontier_distributed(
+                        self.db.device, phys, self.mesh, self.shard_axes,
+                        sharded_db=sdb,
+                    )
+                    if names:  # shard_map body vmaps over the parameter vectors
+                        bfn = X.compile_frontier_distributed(
+                            self.db.device, phys, self.mesh, self.shard_axes,
+                            batched=True, sharded_db=sdb,
+                        )
+                else:
+                    strategy = self.strategy
+                    if strategy == "auto":
+                        strategy = self._pick_strategy(plan)
+                    fn = X.STRATEGIES[strategy](
+                        self.db.device, phys, block_skipping=block_skipping
+                    )
+                    if strategy == "frontier" and names:
+                        # the SpMM serving path: one edge stream per hop for
+                        # the whole batch. fragment_loop keeps the vmap
+                        # fallback so its batched results stay bit-identical
+                        # to its own single-query calls.
+                        bfn = X.compile_frontier_batched(
+                            self.db.device, phys, block_skipping=block_skipping
+                        )
+                csp.annotate(strategy=strategy, n_ops=len(phys.ops))
+            pq = PreparedQuery(
+                sql, plan, fn, names, plan.group_entity, phys, bfn,
+                strategy=strategy, block_skipping=block_skipping,
+                hop_estimates=self._hop_fractions(plan),
+                device_db=self.db.device, mesh=self.mesh,
+                shard_axes=self.shard_axes, sharded_db=sdb,
             )
-            if names:  # shard_map body vmaps over the parameter vectors
-                bfn = X.compile_frontier_distributed(
-                    self.db.device, phys, self.mesh, self.shard_axes,
-                    batched=True, sharded_db=sdb,
-                )
-        else:
-            strategy = self.strategy
-            if strategy == "auto":
-                strategy = self._pick_strategy(plan)
-            fn = X.STRATEGIES[strategy](
-                self.db.device, phys, block_skipping=block_skipping
-            )
-            if strategy == "frontier" and names:
-                # the SpMM serving path: one edge stream per hop for the whole
-                # batch. fragment_loop keeps the vmap fallback so its batched
-                # results stay bit-identical to its own single-query calls.
-                bfn = X.compile_frontier_batched(
-                    self.db.device, phys, block_skipping=block_skipping
-                )
-        pq = PreparedQuery(
-            sql, plan, fn, names, plan.group_entity, phys, bfn,
-            strategy=strategy, block_skipping=block_skipping,
-            hop_estimates=self._hop_fractions(plan),
-        )
         self._cache[key] = pq
         return pq
 

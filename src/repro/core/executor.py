@@ -31,6 +31,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -40,6 +41,7 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import active as active_meta
+from ..obs import trace as obs_trace
 from ..storage import (
     DenseColumn,
     DeviceColumn,
@@ -250,15 +252,126 @@ def densify_plan(phys: PhysicalPlan) -> PhysicalPlan:
 # ---------------------------------------------------------------------------
 
 
-def walk_ir(phys: PhysicalPlan, interp: "_Interp"):
+def _trace_clean() -> bool:
+    """True outside any jax trace — the guard that keeps span recording and
+    ``block_until_ready`` fencing strictly on the host side of jit."""
+    try:
+        return jax.core.trace_state_clean()
+    except AttributeError:  # pragma: no cover - very old jax
+        return True
+
+
+def walk_ir(phys: PhysicalPlan, interp: "_Interp", stop: int | None = None):
     """Fold the op sequence through ``interp``. Continuation-passing so the
-    scalar strategy can emit its nested fragment loops from the same walk."""
-    ops = phys.ops
+    scalar strategy can emit its nested fragment loops from the same walk.
+
+    ``stop`` truncates the walk to the first ``stop`` ops and returns the raw
+    interpreter state (no finalize) — the profiling prefix entry.
+
+    When an observability tracer is recording (``obs.trace``) *and* the walk
+    runs eagerly (outside any jit trace), every op is wrapped in a nested span
+    carrying its label, fenced own-time, and hop metadata — the per-op
+    breakdown behind ``PreparedQuery.profile()``. Under a trace (the normal
+    compiled path) the walk is the plain fold: spans record around traced
+    calls, never inside them."""
+    ops = phys.ops if stop is None else phys.ops[:stop]
+    if obs_trace.current() is not None:
+        return _walk_ir_recorded(phys, ops, interp)
 
     def go(i: int, state):
         if i == len(ops):
             return state
         return interp.apply(ops[i], state, lambda st: go(i + 1, st))
+
+    return go(0, None)
+
+
+def _annotate_op_span(sp, op, state, interp) -> None:
+    """Static + observed metadata for one op span: shapes, strategy knobs, and
+    — for a HopOp with a concrete incoming frontier — the observed support and
+    surviving-block count (kernels/active.py metadata, computed on host)."""
+    if not isinstance(op, HopOp):
+        return
+    sp.annotate(
+        table=op.table, src_key=op.src_key,
+        E=int(op.src_ids.shape[0]), dom_dst=int(op.dom_dst),
+        block_skipping=getattr(interp, "block_skipping", None),
+    )
+    w = state
+    if w is None or not hasattr(w, "shape") or isinstance(w, jax.core.Tracer):
+        return
+    try:
+        zero = interp.sr.zero
+        sup = np.asarray(w != zero)
+        if sup.ndim == 2:
+            sup = sup.any(axis=0)
+        h = int(op.indptr.shape[0]) - 1
+        if sup.ndim != 1 or sup.shape[0] != h:
+            return
+        degrees = np.diff(np.asarray(op.indptr))
+        touched = int(degrees[sup].sum())
+        E = max(int(op.src_ids.shape[0]), 1)
+        sp.annotate(
+            frontier_nnz=int(sup.sum()),
+            observed_active_fraction=round(touched / E, 6),
+        )
+        if op.block_src_min is not None:
+            _, na, bf = active_meta.active_block_list_np(
+                sup, op.block_src_min, op.block_src_max
+            )
+            sp.annotate(
+                active_blocks=int(na[0]),
+                n_blocks=int(np.asarray(op.block_src_min).shape[0]),
+                active_block_fraction=round(float(bf), 6),
+            )
+    except Exception:  # annotation must never break execution
+        pass
+
+
+def _walk_ir_recorded(phys: PhysicalPlan, ops, interp: "_Interp"):
+    """The instrumented fold: one span per op, nested along the continuation
+    chain (op k's span contains ops k+1..n — self time = wall − children).
+    The span's ``kernel_ms`` is the ``block_until_ready``-fenced time from op
+    entry to the op's own output being device-ready (captured the first time
+    the continuation runs eagerly). Ops whose continuation only ever fires
+    under a trace (the scalar strategy's fori_loop bodies) are closed after
+    ``apply`` returns and flagged ``fused_tail`` — their time includes the
+    traced downstream ops, which get no spans of their own."""
+    labels = phys.op_signature()
+    plan_key = id(phys.ops)
+
+    def go(i: int, state):
+        if i == len(ops):
+            return state
+        op = ops[i]
+        if not _trace_clean():
+            return interp.apply(op, state, lambda st: go(i + 1, st))
+        with obs_trace.span(labels[i], op_index=i, plan=plan_key) as sp:
+            if state is not None:
+                jax.block_until_ready(state)
+            _annotate_op_span(sp, op, state, interp)
+            t0 = time.perf_counter()
+            seen = [0]
+
+            def cont(st):
+                if _trace_clean():
+                    seen[0] += 1
+                    if seen[0] == 1:
+                        sp.annotate(
+                            dispatch_ms=round((time.perf_counter() - t0) * 1e3, 4)
+                        )
+                        sp.fence(st)
+                return go(i + 1, st)
+
+            out = interp.apply(op, state, cont)
+            if seen[0] == 0:  # continuation only ran inside a trace
+                sp.annotate(
+                    dispatch_ms=round((time.perf_counter() - t0) * 1e3, 4),
+                    fused_tail=True,
+                )
+                sp.fence(out)
+            sp.annotate(calls=max(seen[0], 1))
+        return out
 
     return go(0, None)
 
@@ -879,6 +992,7 @@ def compile_frontier_distributed(
     axes: tuple[str, ...] = ("data",),
     batched: bool = False, frontier_dtype=jnp.float32,
     sharded_db: DeviceDB | None = None,
+    prefix: int | None = None,
 ) -> Callable[..., jnp.ndarray]:
     """shard_map execution: frontier vectors replicated, edges sharded; each hop
     computes a local partial accumulator and ⊕-reduces it — the paper's parallel
@@ -891,6 +1005,12 @@ def compile_frontier_distributed(
     ``sharded_db`` lets callers compiling several entries against one mesh
     (e.g. the engine's single + batched pair) share one ``shard_edges``
     placement instead of device-putting every edge array per compile.
+
+    ``prefix=k`` compiles only the plan's first k ops and returns the raw
+    interpreter state (no finalize; AVG runs its weighted pass only) — the
+    profiling entry behind ``PreparedQuery.profile()``'s prefix-delta per-op
+    timings. Every intermediate state is replicated (each hop ends in its
+    ⊕-collective), so the ``P()`` out-spec holds for any prefix.
     """
     phys = ensure_lowered(db, plan)
     names = list(phys.param_names)
@@ -916,13 +1036,13 @@ def compile_frontier_distributed(
     def run(edges, side, *args):
         def eval_once(*scalar_args):
             params = dict(zip(names, scalar_args))
-            return execute_ir(
-                phys,
-                lambda sr, um: _DistributedInterp(
-                    params, sr, um, edges=edges, side=side, axes=axes,
-                    frontier_dtype=frontier_dtype,
-                ),
+            mk = lambda sr, um: _DistributedInterp(
+                params, sr, um, edges=edges, side=side, axes=axes,
+                frontier_dtype=frontier_dtype,
             )
+            if prefix is not None:
+                return walk_ir(phys, mk(semiring_for(phys.agg), True), stop=prefix)
+            return execute_ir(phys, mk)
 
         if batched:
             # batched OLAP serving: vmap over parameter vectors inside the

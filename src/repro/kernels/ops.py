@@ -31,6 +31,7 @@ import numpy as np
 
 from . import active as _active
 from . import ref
+from ..obs import trace as _obs_trace
 from .bitmap_ops import bitmap_and as _bitmap_and
 from .bitmap_ops import bitmap_and_popcount as _bitmap_and_popcount
 from .bitunpack import bitunpack as _bitunpack
@@ -72,13 +73,22 @@ def _plan_skip(w, op: str, E: int, blocks, block_skipping: str):
         bi, na = _active.active_block_list(
             w, zero, jnp.asarray(src_min), jnp.asarray(src_max)
         )
+        _obs_trace.annotate(skip_tier="traced", n_blocks=nb)
         return bi, na, ("cond" if block_skipping == "auto" else "static")
     support = np.asarray(w != zero)
     if support.ndim == 2:
         support = support.any(axis=0)
     bi, na, frac = _active.active_block_list_np(support, src_min, src_max)
     if block_skipping == "auto" and frac > _active.SKIP_BLOCK_FRACTION:
+        _obs_trace.annotate(
+            skip_tier="eager", skip_decision="scan", n_blocks=nb,
+            active_blocks=int(na[0]), active_block_fraction=float(frac),
+        )
         return None
+    _obs_trace.annotate(
+        skip_tier="eager", skip_decision="skip", n_blocks=nb,
+        active_blocks=int(na[0]), active_block_fraction=float(frac),
+    )
     return jnp.asarray(bi), jnp.asarray(na), "static"
 
 

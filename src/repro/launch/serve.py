@@ -20,10 +20,13 @@ from collections import deque
 
 
 def _serve_analytics(args) -> None:
+    import json
+
     import numpy as np
 
     from repro.core.engine import GQFastDatabase, GQFastEngine, batch_bucket
     from repro.data import synth_graph as SG
+    from repro.obs.metrics import MetricsRegistry
 
     print("loading database…")
     t0 = time.time()
@@ -32,7 +35,6 @@ def _serve_analytics(args) -> None:
     )
     db = GQFastDatabase(schema, account_space=False)
     eng = GQFastEngine(db)
-    n_authors = schema.entities["Author"].size
     print(f"  {time.time()-t0:.1f}s "
           f"(DT {schema.relationships['DT'].num_rows} rows, "
           f"DA {schema.relationships['DA'].num_rows} rows)")
@@ -44,12 +46,34 @@ def _serve_analytics(args) -> None:
     prepared = {name: eng.prepare(sql) for name, sql in queries.items()}
     rng = np.random.default_rng(0)
 
+    # parameter samplers draw from the loaded graph's actual id domains —
+    # the entity sizes in the schema, not whatever the default scale was
+    n_authors = schema.entities["Author"].size
+    n_docs = schema.entities["Document"].size
+    n_terms = schema.entities["Term"].size
+
     def sample_params(kind: str) -> dict[str, int]:
         if kind == "AS":
             return {"a0": int(rng.integers(0, n_authors))}
         if kind in ("SD", "FSD"):
-            return {"d0": int(rng.integers(0, args.docs))}
-        return {"t1": int(rng.integers(0, 50)), "t2": int(rng.integers(0, 50))}
+            return {"d0": int(rng.integers(0, n_docs))}
+        return {"t1": int(rng.integers(0, n_terms)),
+                "t2": int(rng.integers(0, n_terms))}
+
+    reg = MetricsRegistry()
+
+    def _open_out(path: str):
+        import os
+
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        return open(path, "w")
+
+    def dump_metrics() -> None:
+        if args.metrics_json:
+            with _open_out(args.metrics_json) as fh:
+                fh.write(reg.to_json(indent=2))
 
     bucket = batch_bucket(args.batch)
     names = list(queries)
@@ -68,19 +92,31 @@ def _serve_analytics(args) -> None:
         )
     print(f"  {time.time()-t0:.1f}s")
 
+    if args.profile_json:
+        # one EXPLAIN ANALYZE profile of the first query shape, for artifacts
+        kind = names[0]
+        prof = prepared[kind].profile(**sample_params(kind))
+        with _open_out(args.profile_json) as fh:
+            fh.write(prof.to_json(indent=2))
+        print(f"  wrote QueryProfile({kind}) to {args.profile_json}")
+
     # sequential baseline: the same request mix served one query at a time
     base_n = min(args.requests, 25)
     t0 = time.perf_counter()
     for _, kind, params in stream[:base_n]:
         prepared[kind](**params)
-    seq_qps = base_n / (time.perf_counter() - t0)
+    seq_dt = time.perf_counter() - t0
+    seq_qps = base_n / seq_dt
+    reg.gauge("serve.sequential_queries_per_sec").set(seq_qps)
 
     print(f"serving {args.requests} requests, micro-batch ≤ {args.batch}…")
     results: list = [None] * len(stream)
     queue = deque(stream)
     sizes: list[int] = []
+    lat_all = reg.histogram("serve.request_latency_ms")
     t0 = time.perf_counter()
     while queue:
+        tb = time.perf_counter()
         # collect: drain up to `batch` queued requests of the head's shape
         i0, kind, p0 = queue.popleft()
         group = [(i0, p0)]
@@ -101,15 +137,43 @@ def _serve_analytics(args) -> None:
         for row, (req_id, _) in enumerate(group):  # scatter to requests
             results[req_id] = out[row]
         sizes.append(len(group))
+        # every request in the group completes when its batch does
+        batch_ms = (time.perf_counter() - tb) * 1e3
+        for _ in group:
+            lat_all.observe(batch_ms)
+        reg.histogram(f"serve.request_latency_ms.{kind}").observe(batch_ms)
+        reg.counter("serve.requests_served").inc(len(group))
+        reg.counter("serve.batches_executed").inc()
+        reg.counter("serve.padded_rows").inc(bucket - len(group))
+        reg.gauge("serve.batch_occupancy").set(float(np.mean(sizes)))
+        reg.gauge("serve.bucket_padding_waste").set(
+            1.0 - float(np.sum(sizes)) / (len(sizes) * bucket)
+        )
+        elapsed = time.perf_counter() - t0
+        reg.gauge("serve.queries_per_sec").set(
+            float(np.sum(sizes)) / elapsed if elapsed > 0 else 0.0
+        )
+        if args.metrics_every and len(sizes) % args.metrics_every == 0:
+            dump_metrics()
     dt = time.perf_counter() - t0
 
     assert all(r is not None for r in results)
     qps = args.requests / dt
+    reg.gauge("serve.queries_per_sec").set(qps)
+    reg.gauge("serve.speedup_vs_sequential").set(qps / seq_qps)
+    dump_metrics()
+    snap = lat_all.snapshot()
     print(f"\n  {args.requests} requests in {dt:.2f}s over {len(sizes)} batched "
           f"passes (mean occupancy {np.mean(sizes):.1f}/{bucket})")
+    print(f"  latency p50/p95/p99: {snap['p50']:.1f} / {snap['p95']:.1f} / "
+          f"{snap['p99']:.1f} ms")
     print(f"  micro-batched: {qps:8.1f} queries/s")
     print(f"  sequential:    {seq_qps:8.1f} queries/s "
           f"(speedup ×{qps/seq_qps:.1f})")
+    if args.metrics_json:
+        print(f"  metrics written to {args.metrics_json}")
+    if args.echo_metrics:
+        print(json.dumps(reg.snapshot()["gauges"], indent=2))
 
 
 def main() -> None:
@@ -122,6 +186,16 @@ def main() -> None:
                          "(padded to the engine's bucket size)")
     ap.add_argument("--docs", type=int, default=20_000,
                     help="analytics: synthetic database scale")
+    ap.add_argument("--metrics-json", default=None, metavar="PATH",
+                    help="analytics: dump the metrics registry (latency "
+                         "histograms, occupancy/padding gauges, qps) as JSON")
+    ap.add_argument("--metrics-every", type=int, default=0, metavar="N",
+                    help="analytics: rewrite --metrics-json every N batches "
+                         "(0: only at exit)")
+    ap.add_argument("--profile-json", default=None, metavar="PATH",
+                    help="analytics: dump one QueryProfile as JSON after warmup")
+    ap.add_argument("--echo-metrics", action="store_true",
+                    help="analytics: print the gauge snapshot at exit")
     args = ap.parse_args()
 
     if args.workload == "analytics":

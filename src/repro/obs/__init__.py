@@ -1,0 +1,15 @@
+"""Query-lifecycle observability (DESIGN.md §Observability).
+
+Zero-dependency subsystem threaded through parse → lower → compile → execute:
+
+  * :mod:`.trace`   — context-var span tracer (no-op when disabled).
+  * :mod:`.metrics` — counters / gauges / fixed-bucket histograms + registry.
+  * :mod:`.profile` — ``QueryProfile`` (per-IR-op timings, predicted-vs-
+    observed hop fractions, device memory) behind ``PreparedQuery.profile()``
+    and ``explain(analyze=True)``.
+
+Importing this package pulls no jax; the profiling module imports it lazily.
+"""
+from . import metrics, trace  # noqa: F401
+from .metrics import REGISTRY, Counter, Gauge, Histogram, MetricsRegistry  # noqa: F401
+from .trace import Tracer, annotate, current, enabled, recording, span  # noqa: F401

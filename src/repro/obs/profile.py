@@ -1,0 +1,490 @@
+"""Query profiling: per-IR-op timings + predicted-vs-observed hop fractions.
+
+:func:`profile_prepared` turns one execution of a prepared query into a
+:class:`QueryProfile` — the payload behind ``PreparedQuery.profile()`` and
+``explain(analyze=True)`` (DESIGN.md §Observability):
+
+  * **result** — produced by the query's own compiled executable with the same
+    arguments ``__call__`` would pass, so it is bit-identical to plain
+    execution by construction (profiling never re-derives results from an
+    instrumented path).
+  * **total_wall_ms** — median ``block_until_ready``-fenced end-to-end time.
+  * **ops** — per-IR-op self wall / device-fenced kernel time. For the
+    ``frontier`` and ``fragment_loop`` strategies these come from one eager
+    (un-jitted) instrumented walk of the same interpreter the strategy
+    compiles (``executor.walk_ir`` emits nested spans when a tracer is
+    recording); ops fused inside a traced region (the scalar strategy's nested
+    loops) are marked ``fused`` and charge their time to the enclosing op. The
+    ``distributed`` strategy cannot run its interpreter eagerly (collectives
+    need the mesh), so per-op times are prefix deltas: the plan's k-op
+    prefixes are compiled through the same shard_map entry and op k is charged
+    ``t(k) − t(k−1)``.
+  * **hops** — the engine's lower-time selectivity estimates
+    (``_hop_fractions``) against *observed* fractions from a host-side numpy
+    support propagation over the physical IR (structural reachability — the
+    same quantity the estimate predicts). A hop whose observed fraction is off
+    by more than :data:`MISPREDICT_FACTOR` in either direction increments the
+    ``strategy_mispredict`` counter in :data:`repro.obs.metrics.REGISTRY`.
+  * **memory** — ``storage.device_space_report`` of the query's device DB.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Any
+
+import numpy as np
+
+from . import trace as T
+from .metrics import REGISTRY
+
+#: observed/estimated active-fraction ratio beyond which (either direction)
+#: a hop counts as a strategy-model mispredict
+MISPREDICT_FACTOR = 2.0
+
+
+@dataclass
+class OpProfile:
+    index: int
+    name: str  # op_signature label, e.g. "Hop(DT.Term->Doc;measure)"
+    wall_ms: float | None = None  # self wall (minus child ops); None if fused
+    kernel_ms: float | None = None  # device-fenced own time
+    calls: int = 1
+    fused: bool = False  # time charged to an enclosing op (scalar loops)
+    meta: dict = field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        d = {"index": self.index, "name": self.name, "calls": self.calls}
+        if self.wall_ms is not None:
+            d["wall_ms"] = round(self.wall_ms, 4)
+        if self.kernel_ms is not None:
+            d["kernel_ms"] = round(self.kernel_ms, 4)
+        if self.fused:
+            d["fused"] = True
+        if self.meta:
+            d["meta"] = self.meta
+        return d
+
+
+@dataclass
+class HopProfile:
+    table: str
+    src_key: str
+    est_active_fraction: float | None
+    observed_active_fraction: float | None
+    mispredict: bool = False
+    meta: dict = field(default_factory=dict)
+
+    @property
+    def ratio(self) -> float | None:
+        if not self.est_active_fraction or self.observed_active_fraction is None:
+            return None
+        return self.observed_active_fraction / self.est_active_fraction
+
+    def to_dict(self) -> dict:
+        d: dict = {
+            "table": self.table, "src_key": self.src_key,
+            "est_active_fraction": self.est_active_fraction,
+            "observed_active_fraction": self.observed_active_fraction,
+            "mispredict": self.mispredict,
+        }
+        if self.ratio is not None:
+            d["ratio"] = round(self.ratio, 4)
+        d.update(self.meta)
+        return d
+
+
+@dataclass
+class QueryProfile:
+    sql: str
+    strategy: str
+    block_skipping: str
+    agg: str | None
+    params: dict
+    total_wall_ms: float
+    reps: int
+    result: np.ndarray
+    ops: list[OpProfile]
+    hops: list[HopProfile]
+    memory: dict | None = None
+    spans: dict | None = None  # raw span tree from the instrumented walk
+    timing_method: str = "eager-span"  # | "prefix-delta"
+
+    def to_dict(self) -> dict:
+        return {
+            "sql": " ".join(self.sql.split()),
+            "strategy": self.strategy,
+            "block_skipping": self.block_skipping,
+            "agg": self.agg,
+            "params": {k: _jsonable(v) for k, v in self.params.items()},
+            "total_wall_ms": round(self.total_wall_ms, 4),
+            "reps": self.reps,
+            "timing_method": self.timing_method,
+            "result_shape": list(self.result.shape),
+            "result_nnz": int(np.count_nonzero(self.result)),
+            "ops": [o.to_dict() for o in self.ops],
+            "hops": [h.to_dict() for h in self.hops],
+            "memory": self.memory,
+            "spans": self.spans,
+        }
+
+    def to_json(self, **kw) -> str:
+        kw.setdefault("indent", 1)
+        return json.dumps(self.to_dict(), **kw)
+
+    def phase_summary(self) -> dict[str, float]:
+        """op label → self wall ms (fused ops omitted) — the compact per-phase
+        breakdown benchmarks embed next to their headline numbers."""
+        return {
+            f"[{o.index}] {o.name}": round(o.wall_ms, 4)
+            for o in self.ops if o.wall_ms is not None
+        }
+
+    def render(self) -> str:
+        """The EXPLAIN ANALYZE text block (appended to ``explain()``)."""
+        out = [
+            f"analyze: total {self.total_wall_ms:.3f} ms fenced "
+            f"(median of {self.reps}; result shape {list(self.result.shape)}, "
+            f"nnz {int(np.count_nonzero(self.result))}; "
+            f"per-op via {self.timing_method})",
+        ]
+        for o in self.ops:
+            if o.fused or o.wall_ms is None:
+                timing = "(fused into enclosing op)" if o.fused else "(not measured)"
+            else:
+                timing = f"wall {o.wall_ms:8.3f} ms  kernel {o.kernel_ms or 0.0:8.3f} ms"
+                if o.calls > 1:
+                    timing += f"  calls={o.calls}"
+            extras = "".join(
+                f" {k}={o.meta[k]}"
+                for k in ("active_blocks", "n_blocks", "skip_tier") if k in o.meta
+            )
+            out.append(f"  [{o.index}] {o.name:40s} {timing}{extras}")
+        if self.hops:
+            out.append("hops (predicted vs observed active fraction):")
+            for h in self.hops:
+                est = "n/a" if h.est_active_fraction is None else f"{h.est_active_fraction:.4g}"
+                obs = "n/a" if h.observed_active_fraction is None else f"{h.observed_active_fraction:.4g}"
+                line = f"  I_{h.table}.{h.src_key}: est={est} obs={obs}"
+                if h.ratio is not None:
+                    line += f" ratio={h.ratio:.2f}"
+                if h.mispredict:
+                    line += f"  MISPREDICT(>{MISPREDICT_FACTOR:g}x)"
+                out.append(line)
+        if self.memory:
+            tot, dense = self.memory.get("total_bytes"), self.memory.get("dense_bytes")
+            if tot:
+                out.append(
+                    f"memory: device {tot/2**20:.2f} MiB"
+                    + (f" (decoded-CSR baseline {dense/2**20:.2f} MiB, "
+                       f"ratio {dense/tot:.2f})" if dense else "")
+                )
+        return "\n".join(out)
+
+
+def _jsonable(v):
+    if isinstance(v, (int, float, str, bool, type(None))):
+        return v
+    a = np.asarray(v)
+    return a.item() if a.ndim == 0 else a.tolist()
+
+
+def mispredicted(est: float | None, obs: float | None,
+                 factor: float = MISPREDICT_FACTOR) -> bool:
+    """Is the observed active fraction off by more than ``factor`` in either
+    direction from the estimate? (Both ~0 agree: a correctly-predicted dead
+    hop is not a mispredict.)"""
+    if est is None or obs is None:
+        return False
+    if est < 1e-12 and obs < 1e-12:
+        return False
+    if est <= 0.0:
+        return True
+    return not (est / factor <= obs <= est * factor)
+
+
+# ---------------------------------------------------------------------------
+# Observed hop fractions: host-side support propagation over the physical IR
+# ---------------------------------------------------------------------------
+
+
+def observed_hop_fractions(phys, params: dict) -> list[dict]:
+    """Walk the lowered IR with a numpy boolean support vector and record, for
+    every top-level HopOp, the fraction of its edges whose source is in the
+    incoming support — the observed counterpart of the engine's
+    ``_hop_fractions`` estimate (structural reachability; measure values do
+    not affect it, exactly as in the estimate). Runs entirely on host."""
+    hops: list[dict] = []
+    _support_walk(phys, params, hops)
+    return hops
+
+
+def _support_walk(phys, params: dict, hops_out: list[dict] | None) -> np.ndarray:
+    from ..core.lower import (
+        DegreeFilterOp, EntityFilterOp, GroupOp, HopOp, LParam, SeedOp,
+    )
+
+    np_col = lambda c: np.asarray(c.array)
+    sup: np.ndarray | None = None
+    for op in phys.ops:
+        if isinstance(op, SeedOp):
+            if op.ids is not None:
+                ids = [
+                    int(params[i.name]) if isinstance(i, LParam) else int(i)
+                    for i in op.ids
+                ]
+                sup = np.zeros(op.dom, bool)
+                sup[np.asarray(ids, np.int64)] = True
+            else:
+                sup = np.ones(op.dom, bool)
+                for prog in op.programs:  # sub-chain hops aren't top-level
+                    sup &= _support_walk(prog, params, None)
+                if op.const_mask is not None:
+                    sup &= np.asarray(op.const_mask) > 0
+                for c in op.param_conds:
+                    sup &= np.asarray(c.mask(params, np_col))
+        elif isinstance(op, HopOp):
+            src = np.asarray(op.src_ids)
+            E = int(src.shape[0])
+            edge_active = sup[src] if E else np.zeros(0, bool)
+            touched = int(edge_active.sum())
+            reached = np.zeros(op.dom_dst, bool)
+            if touched:
+                reached[np.asarray(op.dst_ids)[edge_active]] = True
+            if hops_out is not None:
+                rec = {
+                    "table": op.table, "src_key": op.src_key,
+                    "observed_active_fraction": touched / max(E, 1),
+                    "touched_edges": touched, "E": E,
+                    "frontier_nnz": int(sup.sum()),
+                    "reached": int(reached.sum()),
+                }
+                if op.block_src_min is not None:
+                    from ..kernels.active import active_block_list_np
+
+                    _, na, bf = active_block_list_np(
+                        sup, op.block_src_min, op.block_src_max
+                    )
+                    rec["active_blocks"] = int(na[0])
+                    rec["n_blocks"] = int(np.asarray(op.block_src_min).shape[0])
+                    rec["active_block_fraction"] = round(float(bf), 6)
+                hops_out.append(rec)
+            sup = reached
+        elif isinstance(op, DegreeFilterOp):
+            sup = sup & (np.asarray(op.degrees) > 0)
+        elif isinstance(op, EntityFilterOp):
+            if op.const_mask is not None:
+                sup = sup & (np.asarray(op.const_mask) > 0)
+            for c in op.param_conds:
+                sup = sup & np.asarray(c.mask(params, np_col))
+        elif isinstance(op, GroupOp):
+            pass
+        else:  # pragma: no cover - new op kinds must be taught here
+            raise TypeError(op)
+    return sup
+
+
+# ---------------------------------------------------------------------------
+# Per-op timing
+# ---------------------------------------------------------------------------
+
+
+def _records_from_tracer(tracer: T.Tracer, phys) -> list[OpProfile]:
+    """Aggregate the instrumented walk's op spans (matched to ``phys`` by the
+    plan key) into one OpProfile per IR op; ops with no span were fused inside
+    an enclosing traced region."""
+    labels = phys.op_signature()
+    plan_key = id(phys.ops)
+    agg: dict[int, OpProfile] = {}
+    for sp in tracer.iter_spans():
+        if sp.meta.get("plan") != plan_key or "op_index" not in sp.meta:
+            continue
+        i = sp.meta["op_index"]
+        rec = agg.get(i)
+        if rec is None:
+            rec = agg[i] = OpProfile(index=i, name=labels[i], wall_ms=0.0,
+                                     kernel_ms=0.0, calls=0)
+            rec.meta = {
+                k: v for k, v in sp.meta.items() if k not in ("plan", "op_index")
+            }
+        # self time subtracts only same-plan op children: a mask seed's
+        # sub-program walks are children too, but their cost belongs to the
+        # seed op that evaluated them, not to ops of some other plan
+        w = sp.wall_ms or 0.0
+        for c in sp.children:
+            if c.meta.get("plan") == plan_key and "op_index" in c.meta:
+                w -= c.wall_ms or 0.0
+        rec.wall_ms += max(w, 0.0)
+        rec.kernel_ms += sp.kernel_ms or 0.0
+        rec.calls += sp.meta.get("calls", 1)
+        if sp.meta.get("fused_tail"):
+            rec.meta["fused_tail"] = True
+    out = []
+    for i in range(len(phys.ops)):
+        if i in agg:
+            out.append(agg[i])
+        else:
+            out.append(OpProfile(index=i, name=labels[i], fused=True))
+    return out
+
+
+def _op_records_eager(pq, params: dict):
+    """frontier / fragment_loop: one eager instrumented walk of the strategy's
+    own interpreter (kernels run un-jitted; results are discarded — only the
+    compiled executable's output is ever returned)."""
+    import jax.numpy as jnp
+
+    from ..core import executor as X
+
+    phys = pq.phys
+    jparams = {n: jnp.asarray(v) for n, v in params.items()}
+    if pq.strategy == "fragment_loop":
+        seed_op = phys.ops[0]
+        scalar_ok = seed_op.ids is not None and not any(
+            isinstance(op, X.HopOp) and op.semijoin for op in phys.ops
+        )
+        if scalar_ok:
+            phys = X.densify_plan(phys)
+            mk = lambda sr, um: X._FragmentLoopInterp(
+                jparams, sr, um, out_dom=phys.out_dom
+            )
+        else:  # compile_fragment_loop's documented frontier fallback
+            mk = lambda sr, um: X._FrontierInterp(
+                jparams, sr, um, block_skipping=pq.block_skipping
+            )
+    else:
+        mk = lambda sr, um: X._FrontierInterp(
+            jparams, sr, um, block_skipping=pq.block_skipping
+        )
+    with T.recording():  # warm the eager path (lax.cond/pallas caches)
+        X.execute_ir(phys, mk)
+    with T.recording() as tr:
+        X.execute_ir(phys, mk)
+    return _records_from_tracer(tr, phys), tr.to_dict()
+
+
+def _op_records_prefix(pq, args: list, reps: int = 2):
+    """distributed: compile each k-op prefix through the same shard_map entry
+    and charge op k the fenced time delta t(k) − t(k−1)."""
+    import jax
+
+    from ..core import executor as X
+
+    phys = pq.phys
+    labels = phys.op_signature()
+    cum: list[float] = []
+    for k in range(1, len(phys.ops) + 1):
+        fn = X.compile_frontier_distributed(
+            pq.device_db, phys, pq.mesh, pq.shard_axes,
+            sharded_db=pq.sharded_db, prefix=k,
+        )
+        jax.block_until_ready(fn(*args))  # compile + warm
+        ts = []
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(*args))
+            ts.append(time.perf_counter() - t0)
+        cum.append(float(np.median(ts)) * 1e3)
+    recs = []
+    prev = 0.0
+    for i, t in enumerate(cum):
+        dt = max(t - prev, 0.0)
+        recs.append(OpProfile(
+            index=i, name=labels[i], wall_ms=dt, kernel_ms=dt,
+            meta={"method": "prefix-delta", "cumulative_ms": round(t, 4)},
+        ))
+        prev = t
+    return recs, None
+
+
+# ---------------------------------------------------------------------------
+# Entry point
+# ---------------------------------------------------------------------------
+
+
+def profile_prepared(pq, params: dict, reps: int = 3) -> QueryProfile:
+    """Build a :class:`QueryProfile` for one parameter binding of a
+    ``PreparedQuery`` (the implementation behind ``PreparedQuery.profile``)."""
+    import jax
+
+    phys = pq.phys
+    if phys is None:
+        raise ValueError(
+            "profile() needs the lowered physical plan; this PreparedQuery "
+            "was built without one"
+        )
+    missing = [n for n in pq.param_names if n not in params]
+    if missing:
+        raise TypeError(f"profile() missing parameters: {missing}")
+    args = [params[n] for n in pq.param_names]
+
+    # result + end-to-end timing: the query's own compiled executable, same
+    # args — bit-identical to __call__ by construction
+    result = np.asarray(pq.fn(*args))
+    ts = []
+    for _ in range(max(reps, 1)):
+        t0 = time.perf_counter()
+        jax.block_until_ready(pq.fn(*args))
+        ts.append(time.perf_counter() - t0)
+    total_ms = float(np.median(ts)) * 1e3
+
+    # predicted vs observed hop fractions (strategy-independent, host-side)
+    observed = observed_hop_fractions(phys, params)
+    estimates = pq.hop_estimates or []
+    hops: list[HopProfile] = []
+    for i, obs in enumerate(observed):
+        est = estimates[i] if i < len(estimates) else {}
+        est_f = est.get("est_active_fraction")
+        obs_f = obs["observed_active_fraction"]
+        mis = mispredicted(est_f, obs_f)
+        if mis:
+            REGISTRY.counter("strategy_mispredict").inc()
+        hops.append(HopProfile(
+            table=obs["table"], src_key=obs["src_key"],
+            est_active_fraction=est_f, observed_active_fraction=obs_f,
+            mispredict=mis,
+            meta={k: v for k, v in obs.items()
+                  if k not in ("table", "src_key", "observed_active_fraction")},
+        ))
+    REGISTRY.counter("profile_runs").inc()
+
+    # per-op timings
+    if pq.strategy == "distributed":
+        if pq.mesh is None or pq.device_db is None:
+            ops, spans = [], None
+        else:
+            ops, spans = _op_records_prefix(pq, args)
+        method = "prefix-delta"
+    else:
+        ops, spans = _op_records_eager(pq, params)
+        method = "eager-span"
+
+    # fold observed-fraction metadata onto the matching HopOp records
+    from ..core.lower import HopOp
+
+    hop_iter = iter(hops)
+    for i, op in enumerate(phys.ops):
+        if isinstance(op, HopOp) and i < len(ops):
+            h = next(hop_iter, None)
+            if h is not None:
+                ops[i].meta.setdefault("est_active_fraction", h.est_active_fraction)
+                ops[i].meta.setdefault(
+                    "observed_active_fraction", h.observed_active_fraction
+                )
+                for k in ("active_blocks", "n_blocks"):
+                    if k in h.meta:
+                        ops[i].meta.setdefault(k, h.meta[k])
+
+    memory = None
+    if pq.device_db is not None:
+        from ..storage import device_space_report
+
+        memory = device_space_report(pq.device_db)
+
+    return QueryProfile(
+        sql=pq.sql, strategy=pq.strategy, block_skipping=pq.block_skipping,
+        agg=phys.agg, params=dict(params), total_wall_ms=total_ms,
+        reps=max(reps, 1), result=result, ops=ops, hops=hops,
+        memory=memory, spans=spans, timing_method=method,
+    )
