@@ -79,6 +79,9 @@ def _update_perf_summary(suite: str, records: list[dict], seconds: float,
             del suites[stale]
     entry: dict = {
         "seconds": round(seconds, 1),
+        # explicit outcome marker: a failed suite still writes its partial
+        # records above, so consumers must not read presence as success
+        "status": "failed" if error else "ok",
         "meta": meta,
         "metrics": {r["name"]: r["us_per_call"] for r in records if "name" in r},
     }

@@ -12,6 +12,9 @@ from typing import Any, Callable
 import numpy as np
 
 from ..obs import trace as T
+from ..robust import faults as _faults
+from ..robust.admission import PreparedCache
+from ..robust.errors import QueryError, ValidationError
 from . import executor as X
 from .algebra import ChainPlan
 from .fragments import FragmentIndex, build_index
@@ -113,7 +116,27 @@ class PreparedQuery:
     shard_axes: tuple = ("data",)
     sharded_db: Any = None
 
+    def validate_params(self, params: dict) -> None:
+        """Typed parameter-binding validation: every declared parameter bound,
+        no unknown names — callers get a :class:`ValidationError` instead of a
+        raw KeyError out of the argument zip."""
+        missing = [n for n in self.param_names if n not in params]
+        if missing:
+            raise ValidationError(
+                f"missing parameters: {missing}",
+                missing=missing, expected=list(self.param_names),
+                query=" ".join(self.sql.split()),
+            )
+        extra = [n for n in params if n not in self.param_names]
+        if extra:
+            raise ValidationError(
+                f"unknown parameters: {extra}",
+                unknown=extra, expected=list(self.param_names),
+                query=" ".join(self.sql.split()),
+            )
+
     def __call__(self, **params) -> np.ndarray:
+        self.validate_params(params)
         args = [params[n] for n in self.param_names]
         if T.current() is None:  # the zero-overhead default path
             return np.asarray(self.fn(*args))
@@ -166,37 +189,43 @@ class PreparedQuery:
         """Validate one [B] array (or Python list) per parameter: every
         parameter present, none scalar, all the same length."""
         if not self.param_names:
-            raise ValueError(
+            raise ValidationError(
                 "execute_batch needs a parameterized query (this one has none);"
                 " call the prepared query directly instead"
             )
         missing = [n for n in self.param_names if n not in param_arrays]
         if missing:
-            raise TypeError(f"execute_batch missing parameter arrays: {missing}")
+            raise ValidationError(
+                f"execute_batch missing parameter arrays: {missing}",
+                missing=missing, expected=list(self.param_names),
+            )
         args, B = [], None
         for n in self.param_names:
             a = np.asarray(param_arrays[n])
             if a.ndim == 0:
-                raise ValueError(
+                raise ValidationError(
                     f"execute_batch parameter {n!r} is a scalar; pass a list or"
                     " 1-D array with one value per query (a scalar would"
-                    " silently broadcast to every query in the batch)"
+                    " silently broadcast to every query in the batch)",
+                    param=n,
                 )
             if a.ndim != 1:
-                raise ValueError(
-                    f"execute_batch parameter {n!r} must be 1-D, got shape {a.shape}"
+                raise ValidationError(
+                    f"execute_batch parameter {n!r} must be 1-D, got shape {a.shape}",
+                    param=n, shape=a.shape,
                 )
             if B is None:
                 B = a.shape[0]
             elif a.shape[0] != B:
-                raise ValueError(
+                raise ValidationError(
                     f"ragged batch: parameter {n!r} has length {a.shape[0]} but"
                     f" {self.param_names[0]!r} has length {B}; all parameter"
-                    " arrays must have one entry per query"
+                    " arrays must have one entry per query",
+                    param=n,
                 )
             args.append(a)
         if B == 0:
-            raise ValueError("execute_batch got empty parameter arrays")
+            raise ValidationError("execute_batch got empty parameter arrays")
         return args, B
 
     def execute_batch(self, **param_arrays) -> np.ndarray:
@@ -225,12 +254,15 @@ class PreparedQuery:
 
 class GQFastEngine:
     def __init__(self, db: GQFastDatabase, strategy: str = "frontier",
-                 mesh=None, shard_axes: tuple[str, ...] = ("data",)):
+                 mesh=None, shard_axes: tuple[str, ...] = ("data",),
+                 max_prepared: int = 64):
         self.db = db
         self.strategy = strategy
         self.mesh = mesh
         self.shard_axes = shard_axes
-        self._cache: dict[tuple[str, str], PreparedQuery] = {}
+        # fixed-size LRU: each entry pins a traced executable pair, so the
+        # prepare cache must not grow without bound under many query shapes
+        self._cache: PreparedCache = PreparedCache(max_prepared)
 
     def prepare(self, sql: str, block_skipping: str = "auto") -> PreparedQuery:
         """Compile ``sql`` once for repeated execution. ``block_skipping``
@@ -241,23 +273,30 @@ class GQFastEngine:
         from ..kernels.ops import BLOCK_SKIPPING_MODES
 
         if block_skipping not in BLOCK_SKIPPING_MODES:
-            raise ValueError(
+            raise ValidationError(
                 f"block_skipping must be one of {BLOCK_SKIPPING_MODES}, "
-                f"got {block_skipping!r}"
+                f"got {block_skipping!r}",
+                block_skipping=block_skipping, valid=BLOCK_SKIPPING_MODES,
             )
         key = (sql, self.strategy, block_skipping)
-        if key in self._cache:
-            return self._cache[key]
+        cached = self._cache.get(key)
+        if cached is not None:
+            return cached
+        _faults.fire("engine.prepare", query=" ".join(sql.split()))
         with T.span("prepare", query=" ".join(sql.split())):
-            with T.span("parse"):
-                ast = parse(sql)
-            with T.span("plan"):
-                plan = plan_query(self.db.schema, ast)
-            # lower once: every strategy interprets the same physical IR, and
-            # the per-execute mask/ref-resolution work is hoisted out of the
-            # hot path
-            with T.span("lower"):
-                phys = lower(self.db.device, plan)
+            try:
+                with T.span("parse"):
+                    ast = parse(sql)
+                with T.span("plan"):
+                    plan = plan_query(self.db.schema, ast)
+                # lower once: every strategy interprets the same physical IR,
+                # and the per-execute mask/ref-resolution work is hoisted out
+                # of the hot path
+                with T.span("lower"):
+                    phys = lower(self.db.device, plan)
+            except QueryError as e:
+                # every prepare-stage failure carries the query text
+                raise e.with_context(query=" ".join(sql.split()))
             names = list(phys.param_names)
             bfn, sdb = None, None
             # the compile span covers executable construction; jax traces and
@@ -298,7 +337,7 @@ class GQFastEngine:
                 device_db=self.db.device, mesh=self.mesh,
                 shard_axes=self.shard_axes, sharded_db=sdb,
             )
-        self._cache[key] = pq
+        self._cache.put(key, pq)
         return pq
 
     def _hop_fractions(self, plan: ChainPlan) -> list[dict]:

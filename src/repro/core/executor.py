@@ -42,6 +42,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..kernels import active as active_meta
 from ..obs import trace as obs_trace
+from ..robust.errors import ExecutionError, ValidationError
+from ..robust.runner import check_deadline
 from ..storage import (
     DenseColumn,
     DeviceColumn,
@@ -157,9 +159,10 @@ def build_device_db(
     if isinstance(device_encodings, dict):
         unknown = set(device_encodings) - seen_addrs
         if unknown:
-            raise ValueError(
+            raise ValidationError(
                 f"device_encodings keys match no index column: {sorted(unknown)}; "
-                f"valid addresses: {sorted(seen_addrs)}"
+                f"valid addresses: {sorted(seen_addrs)}",
+                unknown=sorted(unknown),
             )
     attrs = {
         (e.name, a): jnp.asarray(col, dtype=jnp.float32)
@@ -346,6 +349,7 @@ def _walk_ir_recorded(phys: PhysicalPlan, ops, interp: "_Interp"):
         op = ops[i]
         if not _trace_clean():
             return interp.apply(op, state, lambda st: go(i + 1, st))
+        check_deadline(labels[i])
         with obs_trace.span(labels[i], op_index=i, plan=plan_key) as sp:
             if state is not None:
                 jax.block_until_ready(state)
@@ -410,7 +414,11 @@ class _Interp:
             return self.entity_filter(op, state, cont)
         if isinstance(op, GroupOp):
             return self.group(op, state, cont)
-        raise TypeError(op)
+        raise ExecutionError(
+            f"no interpreter rule for op {type(op).__name__}",
+            retryable=False, op=type(op).__name__,
+            strategy=type(self).__name__,
+        )
 
     def resolve(self, v):
         return self.params[v.name] if isinstance(v, LParam) else v
@@ -450,14 +458,17 @@ class _FrontierInterp(_Interp):
     early_exit = True
 
     def __init__(self, params: dict[str, Any], sr: Semiring,
-                 use_measures: bool = True, block_skipping: str = "auto"):
+                 use_measures: bool = True, block_skipping: str = "auto",
+                 use_pallas: bool = True):
         super().__init__(params, sr, use_measures)
         self.block_skipping = block_skipping
+        self.use_pallas = use_pallas
 
     def spawn(self) -> "_FrontierInterp":
         """Interpreter for a mask sub-program (always the boolean semiring)."""
         return _FrontierInterp(
-            self.params, BOOL_OR_AND, block_skipping=self.block_skipping
+            self.params, BOOL_OR_AND, block_skipping=self.block_skipping,
+            use_pallas=self.use_pallas,
         )
 
     def blocks_for(self, op: HopOp):
@@ -571,6 +582,7 @@ class _FrontierInterp(_Interp):
             n_dst=op.dom_dst,
             dst_width=op.dst_col.width if dst_packed else 0,
             m_mode=m_mode, m_width=m_width, op=self.sr.name,
+            use_pallas=self.use_pallas,
             blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
@@ -579,6 +591,7 @@ class _FrontierInterp(_Interp):
 
         return K.fragment_spmv(
             w, src, dst, m, n_dst=op.dom_dst, op=self.sr.name,
+            use_pallas=self.use_pallas,
             blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
@@ -607,7 +620,7 @@ class _FrontierInterp(_Interp):
 
 def compile_frontier(
     db: DeviceDB, plan: ChainPlan | PhysicalPlan,
-    block_skipping: str = "auto",
+    block_skipping: str = "auto", use_pallas: bool = True,
 ) -> Callable[..., jnp.ndarray]:
     phys = ensure_lowered(db, plan)
     names = list(phys.param_names)
@@ -618,7 +631,8 @@ def compile_frontier(
         return execute_ir(
             phys,
             lambda sr, um: _FrontierInterp(
-                params, sr, um, block_skipping=block_skipping
+                params, sr, um, block_skipping=block_skipping,
+                use_pallas=use_pallas,
             ),
         )
 
@@ -648,14 +662,15 @@ class _BatchedFrontierInterp(_FrontierInterp):
 
     def __init__(self, params: dict[str, Any], sr: Semiring,
                  use_measures: bool = True, *, batch: int,
-                 block_skipping: str = "auto"):
-        super().__init__(params, sr, use_measures, block_skipping=block_skipping)
+                 block_skipping: str = "auto", use_pallas: bool = True):
+        super().__init__(params, sr, use_measures,
+                         block_skipping=block_skipping, use_pallas=use_pallas)
         self.batch = batch
 
     def spawn(self) -> "_BatchedFrontierInterp":
         return _BatchedFrontierInterp(
             self.params, BOOL_OR_AND, batch=self.batch,
-            block_skipping=self.block_skipping,
+            block_skipping=self.block_skipping, use_pallas=self.use_pallas,
         )
 
     def _seed_ids(self, i) -> jnp.ndarray:
@@ -717,6 +732,7 @@ class _BatchedFrontierInterp(_FrontierInterp):
             m = jnp.broadcast_to(m, (w.shape[0], E))
         return K.fragment_spmm(
             w, src, dst, m, n_dst=op.dom_dst, op=self.sr.name,
+            use_pallas=self.use_pallas,
             blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
@@ -747,13 +763,14 @@ class _BatchedFrontierInterp(_FrontierInterp):
             n_dst=op.dom_dst,
             dst_width=op.dst_col.width if dst_packed else 0,
             m_mode=m_mode, m_width=m_width, op=self.sr.name,
+            use_pallas=self.use_pallas,
             blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
 
 def compile_frontier_batched(
     db: DeviceDB, plan: ChainPlan | PhysicalPlan,
-    block_skipping: str = "auto",
+    block_skipping: str = "auto", use_pallas: bool = True,
 ) -> Callable[..., jnp.ndarray]:
     """Batched serving entry: takes one [B] array per query parameter and
     returns the [B, out_dom] result block in one traced pass — every HopOp
@@ -763,7 +780,9 @@ def compile_frontier_batched(
     phys = ensure_lowered(db, plan)
     names = list(phys.param_names)
     if not names:
-        raise ValueError("batched execution needs at least one query parameter")
+        raise ValidationError(
+            "batched execution needs at least one query parameter"
+        )
 
     @jax.jit
     def run(*args):
@@ -772,7 +791,8 @@ def compile_frontier_batched(
         return execute_ir(
             phys,
             lambda sr, um: _BatchedFrontierInterp(
-                params, sr, um, batch=B, block_skipping=block_skipping
+                params, sr, um, batch=B, block_skipping=block_skipping,
+                use_pallas=use_pallas,
             ),
         )
 
@@ -848,7 +868,7 @@ class _FragmentLoopInterp(_Interp):
 
 def compile_fragment_loop(
     db: DeviceDB, plan: ChainPlan | PhysicalPlan,
-    block_skipping: str = "auto",
+    block_skipping: str = "auto", use_pallas: bool = True,
 ) -> Callable[..., jnp.ndarray]:
     """Nested fori_loops over fragments, scalar per-edge accumulator updates.
     Only id-seeded chains (SD/FSD/AS shapes); mask seeds and semijoins fall
@@ -859,7 +879,8 @@ def compile_fragment_loop(
     if seed_op.ids is None or any(
         isinstance(op, HopOp) and op.semijoin for op in phys.ops
     ):
-        return compile_frontier(db, phys, block_skipping=block_skipping)
+        return compile_frontier(db, phys, block_skipping=block_skipping,
+                                use_pallas=use_pallas)
     phys = densify_plan(phys)  # scalar loops have no packed path (§Storage)
     names = list(phys.param_names)
 

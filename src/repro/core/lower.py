@@ -29,6 +29,7 @@ from typing import Any, Union
 
 import jax.numpy as jnp
 
+from ..robust.errors import ExecutionError, PlanError
 from ..storage import DenseColumn
 from .algebra import (
     BinOp,
@@ -128,8 +129,14 @@ def eval_lexpr(e: LExpr, params: dict, scalars: dict, col):
         args = [eval_lexpr(a, params, scalars, col) for a in e.args]
         if e.fn == "abs":
             return jnp.abs(args[0])
-        raise ValueError(f"unknown function {e.fn}")
-    raise TypeError(e)
+        raise ExecutionError(
+            f"unknown function {e.fn} in lowered expression",
+            retryable=False, fn=e.fn,
+        )
+    raise ExecutionError(
+        f"unknown lowered expression node {type(e).__name__}",
+        retryable=False, node=type(e).__name__,
+    )
 
 
 @dataclass(eq=False)
@@ -382,13 +389,19 @@ def _lower_expr(db, e: Expr, step, plan: ChainPlan) -> LExpr:
                 ("attr", seed.entity, e.attr),
                 db.entity_attrs[(seed.entity, e.attr)],
             )
-        raise ValueError(f"unresolvable ref {e} in step {step}")
+        raise PlanError(
+            f"unresolvable reference {e.var}.{e.attr} while lowering",
+            var=e.var, attr=e.attr, step=type(step).__name__,
+        )
     if isinstance(e, BinOp):
         return LBin(e.op, _lower_expr(db, e.left, step, plan),
                     _lower_expr(db, e.right, step, plan))
     if isinstance(e, Call):
         return LCall(e.fn, tuple(_lower_expr(db, a, step, plan) for a in e.args))
-    raise TypeError(e)
+    raise PlanError(
+        f"unknown expression node {type(e).__name__} while lowering",
+        node=type(e).__name__,
+    )
 
 
 def _lower_conds(db, entity: str, conds: list[ConstCond]):

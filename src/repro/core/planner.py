@@ -29,11 +29,14 @@ from .algebra import (
     expr_refs,
     multiplicative_factors,
 )
+from ..robust.errors import PlanError
 from .schema import Schema
 
 
-class NotRelationshipQuery(ValueError):
-    pass
+class NotRelationshipQuery(PlanError):
+    """The input falls outside the relationship-query class (or references
+    unknown tables/columns/variables). A :class:`repro.robust.errors.PlanError`
+    — and therefore still the ``ValueError`` it has always been."""
 
 
 @dataclass
@@ -47,7 +50,10 @@ def _resolve_table(schema: Schema, name: str) -> str:
     for t in list(schema.entities) + list(schema.relationships):
         if t.lower() == name.lower():
             return t
-    raise NotRelationshipQuery(f"unknown table {name}")
+    raise NotRelationshipQuery(
+        f"unknown table {name}", table=name,
+        known=sorted(list(schema.entities) + list(schema.relationships)),
+    )
 
 
 def plan_query(schema: Schema, q: Query) -> ChainPlan:
@@ -59,11 +65,19 @@ def plan_query(schema: Schema, q: Query) -> ChainPlan:
         vars[t.var] = _VarInfo(t.var, tname, schema.is_relationship(tname))
 
     def key_entity(ref: Ref) -> str:
-        info = vars[ref.var]
+        info = vars.get(ref.var)
+        if info is None:
+            raise NotRelationshipQuery(
+                f"unknown variable {ref.var} (in {ref.var}.{ref.attr})",
+                var=ref.var, attr=ref.attr, known=sorted(vars),
+            )
         try:
             return schema.entity_of(info.table, ref.attr)
         except KeyError:
-            raise NotRelationshipQuery(f"{ref.var}.{ref.attr} is not a key attribute")
+            raise NotRelationshipQuery(
+                f"{ref.var}.{ref.attr} is not a key attribute of {info.table}",
+                var=ref.var, attr=ref.attr, table=info.table,
+            )
 
     # ---- classify constant conditions --------------------------------------
     seed_eq: list[ConstCond] = []  # key = const/param
@@ -72,7 +86,10 @@ def plan_query(schema: Schema, q: Query) -> ChainPlan:
     for c in q.const_conds:
         info = vars.get(c.ref.var)
         if info is None:
-            raise NotRelationshipQuery(f"unknown variable {c.ref.var}")
+            raise NotRelationshipQuery(
+                f"unknown variable {c.ref.var} in WHERE predicate",
+                var=c.ref.var, known=sorted(vars),
+            )
         is_key = _is_key_attr(schema, info, c.ref.attr)
         if c.op == "in" and is_key:
             in_conds.append(c)
@@ -236,9 +253,16 @@ def _resolve_group_ref(schema, vars, group_ref: Ref, plain_refs: list[Ref]) -> R
                 if _is_key_attr(schema, v, group_ref.attr)
             ]
         if len(cands) != 1:
-            raise NotRelationshipQuery(f"ambiguous GROUP BY {group_ref.attr}")
+            raise NotRelationshipQuery(
+                f"ambiguous GROUP BY {group_ref.attr}", attr=group_ref.attr
+            )
         return cands[0]
-    info = vars[group_ref.var]
+    info = vars.get(group_ref.var)
+    if info is None:
+        raise NotRelationshipQuery(
+            f"GROUP BY references unknown variable {group_ref.var}",
+            var=group_ref.var, known=sorted(vars),
+        )
     if info.is_rel and not _is_key_attr(schema, info, group_ref.attr):
         cands = [r for r in plain_refs if r.var == group_ref.var]
         if len(cands) != 1:

@@ -19,6 +19,7 @@ from __future__ import annotations
 
 import re
 
+from ..robust.errors import ParseError
 from .algebra import (
     BinOp,
     Call,
@@ -46,14 +47,21 @@ _KEYWORDS = {
 }
 
 
-def tokenize(sql: str) -> list[tuple[str, str]]:
+def tokenize(sql: str) -> tuple[list[tuple[str, str]], list[int]]:
+    """Token stream plus the character offset of each token in the (stripped)
+    query text — the offsets feed :class:`ParseError` position context."""
     toks: list[tuple[str, str]] = []
+    starts: list[int] = []
     pos = 0
     sql = sql.strip().rstrip(";")
     while pos < len(sql):
         m = _TOKEN_RE.match(sql, pos)
         if not m:
-            raise SyntaxError(f"bad token at: {sql[pos:pos+30]!r}")
+            raise ParseError(
+                f"unrecognized token at character {pos}",
+                position=pos, near=sql[pos:pos + 30], query=sql,
+            )
+        starts.append(m.start(m.lastgroup))
         pos = m.end()
         if m.lastgroup == "num":
             toks.append(("num", m.group("num")))
@@ -64,13 +72,26 @@ def tokenize(sql: str) -> list[tuple[str, str]]:
             toks.append(("kw", w.lower()) if w.lower() in _KEYWORDS else ("name", w))
         else:
             toks.append(("op", m.group("op")))
-    return toks
+    return toks, starts
 
 
 class _Parser:
-    def __init__(self, toks: list[tuple[str, str]]):
+    def __init__(self, toks: list[tuple[str, str]], starts: list[int] | None = None,
+                 sql: str = ""):
         self.toks = toks
+        self.starts = starts or []
+        self.sql = sql
         self.i = 0
+
+    def error(self, message: str, at: int | None = None) -> ParseError:
+        """A :class:`ParseError` anchored at token index ``at`` (default: the
+        current token), carrying the character position and nearby text."""
+        j = min(at if at is not None else self.i, len(self.toks))
+        pos = self.starts[j] if j < len(self.starts) else len(self.sql)
+        return ParseError(
+            message, position=pos, token_index=j,
+            near=self.sql[pos:pos + 30] if self.sql else None, query=self.sql,
+        )
 
     # -- token helpers ------------------------------------------------------
     def peek(self, k: int = 0):
@@ -92,7 +113,9 @@ class _Parser:
     def expect(self, kind: str, val: str | None = None) -> str:
         t = self.next()
         if t[0] != kind or (val is not None and t[1] != val):
-            raise SyntaxError(f"expected {kind} {val or ''}, got {t} at {self.i-1}")
+            raise self.error(
+                f"expected {kind} {val or ''}, got {t[0]} {t[1]!r}", at=self.i - 1
+            )
         return t[1]
 
     # -- grammar ------------------------------------------------------------
@@ -131,7 +154,10 @@ class _Parser:
         if self._expr_agg is not None:
             return SelectItem(expr=expr, ref=None, agg=self._expr_agg)
         self.i = start
-        raise SyntaxError(f"unsupported select item at token {self.toks[start]}")
+        raise self.error(
+            f"unsupported select item (expected a key column, COUNT(*)/EXISTS(*),"
+            f" or an aggregate expression), at token {self.toks[start]}", at=start
+        )
 
     def parse_from(self) -> tuple[list[TableRef], list[JoinCond]]:
         tables: list[TableRef] = []
@@ -174,7 +200,9 @@ class _Parser:
             else:
                 op = self.expect("op")
                 if op not in ("=", ">", "<", ">=", "<="):
-                    raise SyntaxError(f"bad predicate op {op}")
+                    raise self.error(
+                        f"unsupported predicate operator {op!r}", at=self.i - 1
+                    )
                 t = self.peek()
                 if t[0] == "name":
                     joins.append(JoinCond(ref, self.parse_ref()))
@@ -185,7 +213,10 @@ class _Parser:
                     self.next()
                     consts.append(ConstCond(ref, op, Param(t[1])))
                 else:
-                    raise SyntaxError(f"bad rhs {t}")
+                    raise self.error(
+                        f"predicate right-hand side must be a column, number,"
+                        f" or :parameter, got {t[0]} {t[1]!r}"
+                    )
             if not self.accept("kw", "and"):
                 break
         return joins, consts
@@ -221,7 +252,10 @@ class _Parser:
             return Ref(name, self.expect("name"))
         if allow_unqualified:
             return Ref("", name)
-        raise SyntaxError(f"expected qualified ref, got bare {name}")
+        raise self.error(
+            f"expected a qualified column reference (var.Attr), got bare {name!r}",
+            at=self.i - 1,
+        )
 
     # -- expressions --------------------------------------------------------
     _expr_agg: str | None = None  # aggregate kind seen inside the expression
@@ -260,7 +294,7 @@ class _Parser:
             if self._expr_agg is not None:
                 # AGG(a)+AGG(b) would silently merge into AGG(a+b); that
                 # identity holds for SUM only, not MIN/MAX/AVG — reject all
-                raise SyntaxError(
+                raise self.error(
                     f"multiple aggregate calls ({self._expr_agg}, {t[1]}) "
                     "in one select item"
                 )
@@ -284,7 +318,7 @@ class _Parser:
             e = self._add()
             self.expect("op", ")")
             return e
-        raise SyntaxError(f"bad expression atom {t}")
+        raise self.error(f"unexpected token in expression: {t[0]} {t[1]!r}")
 
 
 def _num(s: str):
@@ -292,8 +326,9 @@ def _num(s: str):
 
 
 def parse(sql: str) -> Query:
-    p = _Parser(tokenize(sql))
+    toks, starts = tokenize(sql)
+    p = _Parser(toks, starts, sql.strip().rstrip(";"))
     q = p.parse_query()
     if p.peek()[0] != "eof":
-        raise SyntaxError(f"trailing tokens: {p.toks[p.i:]}")
+        raise p.error(f"trailing tokens after a complete query: {p.toks[p.i:]}")
     return q

@@ -32,6 +32,8 @@ import numpy as np
 from . import active as _active
 from . import ref
 from ..obs import trace as _obs_trace
+from ..robust import faults as _faults
+from ..robust.errors import ValidationError
 from .bitmap_ops import bitmap_and as _bitmap_and
 from .bitmap_ops import bitmap_and_popcount as _bitmap_and_popcount
 from .bitunpack import bitunpack as _bitunpack
@@ -59,7 +61,10 @@ def _plan_skip(w, op: str, E: int, blocks, block_skipping: str):
     ``(block_idx, n_active, mode)`` with mode 'static' (commit to the active
     kernel now) or 'cond' (traced 'auto': pick at runtime via lax.cond)."""
     if block_skipping not in BLOCK_SKIPPING_MODES:
-        raise ValueError(f"unknown block_skipping mode {block_skipping!r}")
+        raise ValidationError(
+            f"unknown block_skipping mode {block_skipping!r}",
+            block_skipping=block_skipping, valid=BLOCK_SKIPPING_MODES,
+        )
     if block_skipping == "off" or blocks is None or E == 0:
         return None
     nb = _active.n_edge_blocks(E)
@@ -120,6 +125,7 @@ def fragment_spmv(weights, src_ids, dst_ids, measures, n_dst: int,
     m = jnp.asarray(measures, jnp.float32)
     if not use_pallas:
         return ref.fragment_spmv_ref(w, s, d, m, n_dst, op=op)
+    _faults.fire("ops.fragment_spmv", op=op, n_dst=n_dst)
     scan = lambda: _fragment_spmv(w, s, d, m, n_dst, op=op, interpret=_interpret())
     plan = _plan_skip(w, op, s.shape[0], blocks, block_skipping)
     if plan is None:
@@ -148,6 +154,7 @@ def fragment_spmm(weights, src_ids, dst_ids, measures, n_dst: int,
     m = jnp.asarray(measures, jnp.float32)
     if m.ndim == 2 or not use_pallas:
         return ref.fragment_spmm_ref(w, s, d, m, n_dst, op=op)
+    _faults.fire("ops.fragment_spmm", op=op, n_dst=n_dst)
     scan = lambda: _fragment_spmm(w, s, d, m, n_dst, op=op, interpret=_interpret())
     plan = _plan_skip(w, op, s.shape[0], blocks, block_skipping)
     if plan is None:
@@ -182,6 +189,7 @@ def fragment_spmm_packed(weights, src_ids, dst, measure=None, mdict=None, *,
             w, s, d, m, md, n_dst, dst_width=dst_width,
             m_mode=m_mode, m_width=m_width, op=op,
         )
+    _faults.fire("ops.fragment_spmm_packed", op=op, n_dst=n_dst)
     scan = lambda: _fragment_spmm_packed(
         w, s, d, m, md, n_dst, dst_width=dst_width,
         m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
@@ -220,6 +228,7 @@ def fragment_spmv_packed(weights, src_ids, dst, measure=None, mdict=None, *,
             w, s, d, m, md, n_dst, dst_width=dst_width,
             m_mode=m_mode, m_width=m_width, op=op,
         )
+    _faults.fire("ops.fragment_spmv_packed", op=op, n_dst=n_dst)
     scan = lambda: _fragment_spmv_packed(
         w, s, d, m, md, n_dst, dst_width=dst_width,
         m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),

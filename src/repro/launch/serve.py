@@ -7,10 +7,26 @@ The analytics workload is the paper's target deployment turned into a real
 serving loop: many concurrent dashboard queries that differ only in parameter
 bindings. The server collects queued requests per query shape, pads each
 micro-batch to a fixed bucket size (one compile per shape), runs ONE batched
-SpMM pass over the engine (``PreparedQuery.execute_batch`` — every hop
-streams the edge arrays once for the whole bucket), scatters the result rows
-back to their requests, and reports measured queries/sec against the
-sequential single-query baseline.
+SpMM pass over the engine via the fault-tolerant runner
+(``repro.robust.run_batch_with_policy`` — every hop streams the edge arrays
+once for the whole bucket, and failures degrade down the ladder instead of
+crashing the loop), scatters the structured per-request outcomes back, and
+reports measured queries/sec against the sequential single-query baseline.
+
+Robustness surface (DESIGN.md §Robustness):
+
+  * every micro-batch runs under a :class:`repro.robust.RobustPolicy`
+    (deadline via ``--deadline-ms``, retry + degradation ladder); request
+    failures come back as typed per-request errors, never tracebacks;
+  * ``--queue-bound N`` sheds load beyond N queued requests (typed
+    OVERLOAD errors, ``serve.requests_shed`` counter) instead of letting the
+    queue grow without bound;
+  * SIGINT/SIGTERM drain the loop and still flush ``--metrics-json`` /
+    ``--profile-json`` (the ``finally`` path);
+  * ``--chaos`` installs a seeded :class:`repro.robust.faults.FaultPlan`
+    (kernel-dispatch raises + per-attempt delays + per-attempt raises)
+    *before* prepare, so trace-time kernel faults and run-time attempt
+    faults both fire — the CI chaos smoke lane.
 """
 from __future__ import annotations
 
@@ -19,14 +35,37 @@ import time
 from collections import deque
 
 
+def _chaos_plan(seed: int):
+    """The chaos smoke lane's seeded fault mix: a bounded burst of kernel-
+    dispatch failures (fires at trace time → ladder demotions), sporadic
+    50 ms per-attempt delays (trips ``--deadline-ms``), and sporadic
+    retryable attempt failures (exercises retry/backoff after jit caching
+    makes kernel sites quiescent)."""
+    from repro.robust import faults
+
+    return (
+        faults.FaultPlan(seed=seed)
+        .add(faults.FaultSpec(site="ops.", mode="raise", prob=0.5, max_fires=4))
+        .add(faults.FaultSpec(site="runner.execute", mode="delay",
+                              delay_ms=50.0, prob=0.2))
+        .add(faults.FaultSpec(site="runner.execute", mode="raise",
+                              prob=0.15, max_fires=6))
+    )
+
+
 def _serve_analytics(args) -> None:
+    import contextlib
     import json
+    import signal
 
     import numpy as np
 
     from repro.core.engine import GQFastDatabase, GQFastEngine, batch_bucket
     from repro.data import synth_graph as SG
     from repro.obs.metrics import MetricsRegistry
+    from repro.robust import RetryPolicy, RobustPolicy, run_batch_with_policy
+    from repro.robust import faults
+    from repro.robust.errors import QueryError, ResourceError
 
     print("loading database…")
     t0 = time.time()
@@ -43,7 +82,6 @@ def _serve_analytics(args) -> None:
         "AS": SG.QUERY_AS, "SD": SG.QUERY_SD, "FSD": SG.QUERY_FSD,
         "AD": SG.QUERY_AD, "FAD": SG.QUERY_FAD,
     }
-    prepared = {name: eng.prepare(sql) for name, sql in queries.items()}
     rng = np.random.default_rng(0)
 
     # parameter samplers draw from the loaded graph's actual id domains —
@@ -61,6 +99,11 @@ def _serve_analytics(args) -> None:
                 "t2": int(rng.integers(0, n_terms))}
 
     reg = MetricsRegistry()
+    policy = RobustPolicy(
+        retry=RetryPolicy(max_attempts=2, base_ms=2.0, seed=args.chaos_seed),
+        deadline_ms=args.deadline_ms,
+        registry=reg,
+    )
 
     def _open_out(path: str):
         import os
@@ -75,101 +118,232 @@ def _serve_analytics(args) -> None:
             with _open_out(args.metrics_json) as fh:
                 fh.write(reg.to_json(indent=2))
 
-    bucket = batch_bucket(args.batch)
-    names = list(queries)
-    stream = [
-        (i, names[int(rng.integers(0, len(names)))]) for i in range(args.requests)
-    ]
-    stream = [(i, kind, sample_params(kind)) for i, kind in stream]
+    # the chaos plan must be live BEFORE prepare: kernel-dispatch fault sites
+    # fire at trace time, so only compiles under the plan can see them
+    chaos = faults.active(_chaos_plan(args.chaos_seed)) if args.chaos \
+        else contextlib.nullcontext()
+    stop: dict = {"signal": None}
 
-    print(f"warmup (one batched compile per shape, bucket={bucket})…")
-    t0 = time.time()
-    for kind in names:
-        p = sample_params(kind)
-        prepared[kind](**p)  # single-query executable (baseline)
-        prepared[kind].execute_batch(
-            **{k: np.full(bucket, v) for k, v in p.items()}
-        )
-    print(f"  {time.time()-t0:.1f}s")
+    def _on_signal(signum, frame):  # drain, flush, exit cleanly
+        stop["signal"] = signum
 
-    if args.profile_json:
-        # one EXPLAIN ANALYZE profile of the first query shape, for artifacts
-        kind = names[0]
-        prof = prepared[kind].profile(**sample_params(kind))
-        with _open_out(args.profile_json) as fh:
-            fh.write(prof.to_json(indent=2))
-        print(f"  wrote QueryProfile({kind}) to {args.profile_json}")
+    old_handlers = {
+        s: signal.signal(s, _on_signal)
+        for s in (signal.SIGINT, signal.SIGTERM)
+    }
 
-    # sequential baseline: the same request mix served one query at a time
-    base_n = min(args.requests, 25)
-    t0 = time.perf_counter()
-    for _, kind, params in stream[:base_n]:
-        prepared[kind](**params)
-    seq_dt = time.perf_counter() - t0
-    seq_qps = base_n / seq_dt
-    reg.gauge("serve.sequential_queries_per_sec").set(seq_qps)
-
-    print(f"serving {args.requests} requests, micro-batch ≤ {args.batch}…")
-    results: list = [None] * len(stream)
-    queue = deque(stream)
+    results: list = []
     sizes: list[int] = []
-    lat_all = reg.histogram("serve.request_latency_ms")
-    t0 = time.perf_counter()
-    while queue:
-        tb = time.perf_counter()
-        # collect: drain up to `batch` queued requests of the head's shape
-        i0, kind, p0 = queue.popleft()
-        group = [(i0, p0)]
-        skipped: deque = deque()
-        while queue and len(group) < args.batch:
-            item = queue.popleft()
-            if item[1] == kind:
-                group.append((item[0], item[2]))
-            else:
-                skipped.append(item)
-        queue.extendleft(reversed(skipped))
-        # pad to the bucket (repeat the last binding; rows sliced off below)
-        arrays = {
-            k: np.asarray([p[k] for _, p in group] + [group[-1][1][k]] * (bucket - len(group)))
-            for k in p0
-        }
-        out = prepared[kind].execute_batch(**arrays)  # one SpMM pass
-        for row, (req_id, _) in enumerate(group):  # scatter to requests
-            results[req_id] = out[row]
-        sizes.append(len(group))
-        # every request in the group completes when its batch does
-        batch_ms = (time.perf_counter() - tb) * 1e3
-        for _ in group:
-            lat_all.observe(batch_ms)
-        reg.histogram(f"serve.request_latency_ms.{kind}").observe(batch_ms)
-        reg.counter("serve.requests_served").inc(len(group))
-        reg.counter("serve.batches_executed").inc()
-        reg.counter("serve.padded_rows").inc(bucket - len(group))
-        reg.gauge("serve.batch_occupancy").set(float(np.mean(sizes)))
-        reg.gauge("serve.bucket_padding_waste").set(
-            1.0 - float(np.sum(sizes)) / (len(sizes) * bucket)
-        )
-        elapsed = time.perf_counter() - t0
-        reg.gauge("serve.queries_per_sec").set(
-            float(np.sum(sizes)) / elapsed if elapsed > 0 else 0.0
-        )
-        if args.metrics_every and len(sizes) % args.metrics_every == 0:
-            dump_metrics()
-    dt = time.perf_counter() - t0
+    plan = None
+    try:
+        with chaos as plan:
+            # prepare every shape; under chaos a prepare may eat an injected
+            # fault — retry once (the faults are retryable), then serve the
+            # remaining shapes and fail that shape's requests with the typed
+            # error instead of crashing the server
+            prepared, prep_errors = {}, {}
+            for name, sql in queries.items():
+                for attempt in (1, 2):
+                    try:
+                        prepared[name] = eng.prepare(sql)
+                        break
+                    except QueryError as e:
+                        prep_errors[name] = e
+                        reg.counter(f"robust.errors.{e.code}").inc()
+                        reg.counter("serve.prepare_failures").inc()
+            for name in list(prep_errors):
+                if name in prepared:
+                    prep_errors.pop(name, None)
 
-    assert all(r is not None for r in results)
-    qps = args.requests / dt
+            bucket = batch_bucket(args.batch)
+            names = list(queries)
+            stream = [
+                (i, names[int(rng.integers(0, len(names)))])
+                for i in range(args.requests)
+            ]
+            stream = [(i, kind, sample_params(kind)) for i, kind in stream]
+
+            print(f"warmup (one batched compile per shape, bucket={bucket})…")
+            t0 = time.time()
+            for kind in prepared:
+                p = sample_params(kind)
+                try:
+                    prepared[kind](**p)  # single-query executable (baseline)
+                    prepared[kind].execute_batch(
+                        **{k: np.full(bucket, v) for k, v in p.items()}
+                    )
+                except QueryError as e:  # chaos can fail a warmup compile;
+                    reg.counter(f"robust.errors.{e.code}").inc()  # the ladder
+                    # re-compiles per rung at serve time, so keep going
+            print(f"  {time.time()-t0:.1f}s")
+
+            if args.profile_json:
+                # one EXPLAIN ANALYZE profile of the first shape, for artifacts
+                try:
+                    kind = next(iter(prepared))
+                    prof = prepared[kind].profile(**sample_params(kind))
+                    with _open_out(args.profile_json) as fh:
+                        fh.write(prof.to_json(indent=2))
+                    print(f"  wrote QueryProfile({kind}) to {args.profile_json}")
+                except QueryError as e:
+                    print(f"  profile skipped (injected fault): {e.code}")
+
+            # sequential baseline: the same mix served one query at a time
+            # (skipped under chaos — raw calls would surface injected faults)
+            seq_qps = None
+            if not args.chaos and prepared:
+                base_n = min(args.requests, 25)
+                t0 = time.perf_counter()
+                served = 0
+                for _, kind, params in stream[:base_n]:
+                    if kind in prepared:
+                        prepared[kind](**params)
+                        served += 1
+                seq_dt = time.perf_counter() - t0
+                seq_qps = served / seq_dt if seq_dt > 0 else None
+                if seq_qps:
+                    reg.gauge("serve.sequential_queries_per_sec").set(seq_qps)
+
+            print(f"serving {args.requests} requests, micro-batch ≤ {args.batch}"
+                  + (f", deadline {args.deadline_ms:.0f}ms"
+                     if args.deadline_ms else "")
+                  + (" [CHAOS]" if args.chaos else "") + "…")
+            results = [None] * len(stream)
+            queue = deque(stream)
+
+            # load shedding: beyond --queue-bound queued requests, reject the
+            # tail with a typed OVERLOAD error instead of queueing unboundedly
+            if args.queue_bound and len(queue) > args.queue_bound:
+                shed = ResourceError(
+                    f"queue bound {args.queue_bound} exceeded; request shed",
+                    code="OVERLOAD", retryable=True,
+                    queue_bound=args.queue_bound,
+                )
+                n_shed = len(queue) - args.queue_bound
+                for _ in range(n_shed):
+                    i, _, _ = queue.pop()
+                    results[i] = {"status": "error", **shed.to_dict()}
+                reg.counter("serve.requests_shed").inc(n_shed)
+                reg.counter(f"robust.errors.{shed.code}").inc(n_shed)
+                print(f"  shed {n_shed} requests over queue bound "
+                      f"{args.queue_bound}")
+
+            lat_all = reg.histogram("serve.request_latency_ms")
+            t0 = time.perf_counter()
+            while queue:
+                if stop["signal"] is not None:
+                    n = len(queue)
+                    reg.counter("serve.requests_unserved").inc(n)
+                    print(f"  signal {stop['signal']}: draining, {n} requests"
+                          " unserved")
+                    break
+                tb = time.perf_counter()
+                # collect: drain up to `batch` requests of the head's shape
+                i0, kind, p0 = queue.popleft()
+                group = [(i0, p0)]
+                skipped: deque = deque()
+                while queue and len(group) < args.batch:
+                    item = queue.popleft()
+                    if item[1] == kind:
+                        group.append((item[0], item[2]))
+                    else:
+                        skipped.append(item)
+                queue.extendleft(reversed(skipped))
+                if kind not in prepared:  # shape never compiled (chaos)
+                    err = prep_errors[kind]
+                    for req_id, _ in group:
+                        results[req_id] = {"status": "error", **err.to_dict()}
+                    reg.counter("serve.requests_error").inc(len(group))
+                    continue
+                # pad to the warmed bucket (repeat the last binding) so the
+                # runner's own batch_bucket sees exactly one compiled shape
+                arrays = {
+                    k: np.asarray([p[k] for _, p in group]
+                                  + [group[-1][1][k]] * (bucket - len(group)))
+                    for k in p0
+                }
+                try:
+                    faults.fire("serve.request", kind=kind, n=len(group))
+                    outcomes = run_batch_with_policy(
+                        prepared[kind], arrays,
+                        deadline_ms=args.deadline_ms, policy=policy,
+                    )[:len(group)]
+                except QueryError as e:  # the serve.request fault site
+                    reg.counter(f"robust.errors.{e.code}").inc()
+                    outcomes = None
+                for row, (req_id, _) in enumerate(group):
+                    oc = outcomes[row] if outcomes is not None else None
+                    if oc is None:
+                        results[req_id] = {"status": "error",
+                                           "code": "FAULT_INJECTED"}
+                        reg.counter("serve.requests_error").inc()
+                    elif oc.status == "error":
+                        results[req_id] = oc.to_dict()
+                        reg.counter("serve.requests_error").inc()
+                    else:
+                        results[req_id] = oc
+                        reg.counter(f"serve.requests_{oc.status}").inc()
+                sizes.append(len(group))
+                # every request in the group completes when its batch does
+                batch_ms = (time.perf_counter() - tb) * 1e3
+                for _ in group:
+                    lat_all.observe(batch_ms)
+                reg.histogram(f"serve.request_latency_ms.{kind}").observe(batch_ms)
+                reg.counter("serve.requests_served").inc(len(group))
+                reg.counter("serve.batches_executed").inc()
+                reg.counter("serve.padded_rows").inc(bucket - len(group))
+                reg.gauge("serve.batch_occupancy").set(float(np.mean(sizes)))
+                reg.gauge("serve.bucket_padding_waste").set(
+                    1.0 - float(np.sum(sizes)) / (len(sizes) * bucket)
+                )
+                elapsed = time.perf_counter() - t0
+                reg.gauge("serve.queries_per_sec").set(
+                    float(np.sum(sizes)) / elapsed if elapsed > 0 else 0.0
+                )
+                if args.metrics_every and len(sizes) % args.metrics_every == 0:
+                    dump_metrics()
+            dt = time.perf_counter() - t0
+    finally:
+        for s, h in old_handlers.items():
+            signal.signal(s, h)
+        # the flush contract: metrics reach disk on clean exit, signal drain,
+        # AND unexpected failure alike
+        dump_metrics()
+
+    if plan is not None:
+        print("  chaos fault stats:", json.dumps(plan.stats()))
+        print("  robust counters:",
+              json.dumps(reg.counters_with_prefix("robust.")))
+
+    answered = sum(r is not None for r in results)
+    by_status = {"ok": 0, "degraded": 0, "error": 0}
+    for r in results:
+        if r is None:
+            continue
+        status = r["status"] if isinstance(r, dict) else r.status
+        by_status[status] = by_status.get(status, 0) + 1
+    if stop["signal"] is None:
+        # no crash, no silent loss: every request has a structured outcome
+        assert answered == len(results), (answered, len(results))
+    n_batches = max(len(sizes), 1)
+    qps = answered / dt if dt > 0 else 0.0
     reg.gauge("serve.queries_per_sec").set(qps)
-    reg.gauge("serve.speedup_vs_sequential").set(qps / seq_qps)
+    if seq_qps:
+        reg.gauge("serve.speedup_vs_sequential").set(qps / seq_qps)
     dump_metrics()
     snap = lat_all.snapshot()
-    print(f"\n  {args.requests} requests in {dt:.2f}s over {len(sizes)} batched "
-          f"passes (mean occupancy {np.mean(sizes):.1f}/{bucket})")
-    print(f"  latency p50/p95/p99: {snap['p50']:.1f} / {snap['p95']:.1f} / "
-          f"{snap['p99']:.1f} ms")
+    print(f"\n  {answered}/{len(results)} requests answered in {dt:.2f}s over "
+          f"{len(sizes)} batched passes "
+          f"(mean occupancy {np.mean(sizes) if sizes else 0:.1f}/{bucket})")
+    print(f"  outcomes: {by_status['ok']} ok, {by_status['degraded']} degraded,"
+          f" {by_status['error']} error")
+    if snap.get("count"):
+        print(f"  latency p50/p95/p99: {snap['p50']:.1f} / {snap['p95']:.1f} / "
+              f"{snap['p99']:.1f} ms")
     print(f"  micro-batched: {qps:8.1f} queries/s")
-    print(f"  sequential:    {seq_qps:8.1f} queries/s "
-          f"(speedup ×{qps/seq_qps:.1f})")
+    if seq_qps:
+        print(f"  sequential:    {seq_qps:8.1f} queries/s "
+              f"(speedup ×{qps/seq_qps:.1f})")
     if args.metrics_json:
         print(f"  metrics written to {args.metrics_json}")
     if args.echo_metrics:
@@ -196,6 +370,17 @@ def main() -> None:
                     help="analytics: dump one QueryProfile as JSON after warmup")
     ap.add_argument("--echo-metrics", action="store_true",
                     help="analytics: print the gauge snapshot at exit")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="analytics: per-request wall-clock deadline; overruns"
+                         " return typed DEADLINE errors")
+    ap.add_argument("--queue-bound", type=int, default=0,
+                    help="analytics: shed requests beyond this queue depth "
+                         "with typed OVERLOAD errors (0: unbounded)")
+    ap.add_argument("--chaos", action="store_true",
+                    help="analytics: serve under a seeded fault-injection "
+                         "plan (kernel raises + attempt delays/raises)")
+    ap.add_argument("--chaos-seed", type=int, default=0,
+                    help="analytics: FaultPlan / retry-jitter seed")
     args = ap.parse_args()
 
     if args.workload == "analytics":

@@ -139,6 +139,15 @@ class MetricsRegistry:
             h = self._histograms[name] = Histogram(bounds)
         return h
 
+    def counters_with_prefix(self, prefix: str) -> dict[str, float]:
+        """Every counter under a dotted namespace (e.g. ``robust.errors.``) —
+        the rollup view serve summaries and chaos assertions read."""
+        return {
+            n: c.snapshot()
+            for n, c in sorted(self._counters.items())
+            if n.startswith(prefix)
+        }
+
     def reset(self) -> None:
         self._counters.clear()
         self._gauges.clear()

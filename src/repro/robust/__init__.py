@@ -1,0 +1,36 @@
+"""Fault-tolerant query lifecycle (DESIGN.md §Robustness).
+
+``errors``    — the typed :class:`QueryError` taxonomy every layer raises.
+``admission`` — pre-execute memory budgeting + the prepared-query LRU.
+``runner``    — deadlines, retry/backoff, and the degradation ladder.
+``faults``    — deterministic, seedable fault injection for chaos tests.
+"""
+from .admission import (  # noqa: F401
+    AdmissionController,
+    AdmissionDecision,
+    MemoryBudget,
+    PreparedCache,
+    estimate_query_bytes,
+)
+from .errors import (  # noqa: F401
+    DeadlineExceeded,
+    ExecutionError,
+    ParseError,
+    PlanError,
+    QueryError,
+    ResourceError,
+    ValidationError,
+    wrap_execution_error,
+)
+from .runner import (  # noqa: F401
+    LADDER,
+    Deadline,
+    QueryOutcome,
+    RetryPolicy,
+    RobustPolicy,
+    check_deadline,
+    deadline_scope,
+    run_batch_with_policy,
+    run_with_policy,
+    rung_fn,
+)

@@ -1,0 +1,217 @@
+"""Admission control: reject (or demote) queries before they OOM the device.
+
+DESIGN.md §Robustness documents the formula. The estimator combines two
+models the engine already maintains:
+
+  * the **resident** term — real device bytes the column store holds,
+    from :func:`repro.storage.device_space_report`;
+  * the **working** term — what executing this plan allocates on top:
+    per-op frontier vectors over entity domains (×batch for the SpMM path,
+    ×2 for AVG's fused SUM+COUNT walk) plus the expected edge-stream traffic
+    from the PR-4 ``_hop_fractions`` cardinality model
+    (est_active_fraction × E × bytes/edge).
+
+``AdmissionController.decide`` compares predicted peak bytes against a
+:class:`MemoryBudget` and returns one of three actions:
+
+    admit   — run as requested.
+    demote  — the batched footprint exceeds budget but a single query fits:
+              serve the bucket serially (degraded, but alive). The runner /
+              serve loop implements the demotion.
+    reject  — even one query at B=1 is predicted over budget → raise
+              :class:`repro.robust.errors.ResourceError` (never submit work
+              the device cannot hold).
+
+This module also owns :class:`PreparedCache` — the fixed-size LRU that
+bounds the engine's prepared-query (compile) cache under many distinct query
+shapes; evictions are counted on the shared metrics registry.
+"""
+from __future__ import annotations
+
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Any
+
+from ..obs.metrics import REGISTRY, MetricsRegistry
+from .errors import ResourceError
+
+#: Bytes per edge the frontier hop streams in the worst (all-dense) case:
+#: src id + dst id + measure, 4 bytes each.
+EDGE_STREAM_BYTES = 12
+
+#: f32 accumulator cell.
+CELL_BYTES = 4
+
+
+@dataclass(frozen=True)
+class MemoryBudget:
+    """``limit_bytes`` is the hard ceiling for resident + working bytes;
+    ``headroom`` (fraction of the limit) is reserved for allocator slack and
+    XLA temporaries, so the effective budget is ``limit × (1 − headroom)``.
+    ``limit_bytes=None`` disables admission (everything admits)."""
+
+    limit_bytes: int | None = None
+    headroom: float = 0.1
+
+    @property
+    def effective_bytes(self) -> float | None:
+        if self.limit_bytes is None:
+            return None
+        return self.limit_bytes * (1.0 - self.headroom)
+
+
+@dataclass
+class AdmissionDecision:
+    action: str  # admit | demote | reject
+    predicted_bytes: int
+    single_bytes: int  # the B=1 prediction (the demotion target)
+    limit_bytes: int | None
+    reason: str = ""
+
+    @property
+    def admitted(self) -> bool:
+        return self.action == "admit"
+
+
+def _plan_working_bytes(phys, batch: int, hop_estimates=None) -> int:
+    """Working-set model for one execution of ``phys`` at batch B: the peak
+    pair of live frontier vectors (walker state + the hop it feeds) plus the
+    expected touched edge stream. AVG runs the walk twice in one program
+    (fused SUM+COUNT) → double the frontier term. Mask-seed sub-programs
+    recurse with the boolean semiring (same widths)."""
+    from ..core.lower import GroupOp, HopOp, SeedOp
+
+    doms: list[int] = []
+    edge_bytes = 0
+    est = {
+        (h["table"], h["src_key"]): h["est_active_fraction"]
+        for h in (hop_estimates or [])
+    }
+    for op in phys.ops:
+        if isinstance(op, SeedOp):
+            doms.append(op.dom)
+            for prog in op.programs:
+                edge_bytes += _plan_working_bytes(prog, batch)
+        elif isinstance(op, HopOp):
+            doms.append(op.dom_dst)
+            E = int(op.src_ids.shape[0])
+            frac = est.get((op.table, op.src_key), 1.0)
+            edge_bytes += int(frac * E) * EDGE_STREAM_BYTES
+        elif isinstance(op, GroupOp):
+            doms.append(op.dom)
+    doms.sort(reverse=True)
+    peak_frontier = sum(doms[:2]) * CELL_BYTES * batch
+    if getattr(phys, "agg", None) == "avg":
+        peak_frontier *= 2
+    return peak_frontier + edge_bytes
+
+
+def estimate_query_bytes(prepared, batch: int = 1) -> dict[str, int]:
+    """Predicted device footprint of executing ``prepared`` at batch B:
+    ``resident`` (column store) + ``working`` (frontiers + edge streams).
+    Pure host arithmetic — never allocates on device."""
+    from ..storage import device_space_report
+
+    resident = 0
+    if prepared.device_db is not None:
+        rep = device_space_report(prepared.device_db)
+        resident = int(rep["total_bytes"]) + int(rep.get("materialized_bytes", 0))
+    working = (
+        _plan_working_bytes(prepared.phys, batch, prepared.hop_estimates)
+        if prepared.phys is not None else 0
+    )
+    return {
+        "resident_bytes": resident,
+        "working_bytes": working,
+        "total_bytes": resident + working,
+    }
+
+
+class AdmissionController:
+    """Pre-execute gate. ``decide`` never raises; ``admit`` raises
+    :class:`ResourceError` on reject (and on demote when ``allow_demote``
+    is False) — the one-call form for callers without a serial fallback."""
+
+    def __init__(self, budget: MemoryBudget,
+                 registry: MetricsRegistry | None = None):
+        self.budget = budget
+        self.registry = registry if registry is not None else REGISTRY
+
+    def decide(self, prepared, batch: int = 1) -> AdmissionDecision:
+        limit = self.budget.effective_bytes
+        if limit is None:
+            est = estimate_query_bytes(prepared, batch)
+            return AdmissionDecision(
+                "admit", est["total_bytes"], est["total_bytes"], None,
+                reason="no budget configured",
+            )
+        est = estimate_query_bytes(prepared, batch)
+        single = estimate_query_bytes(prepared, 1) if batch > 1 else est
+        if est["total_bytes"] <= limit:
+            return AdmissionDecision(
+                "admit", est["total_bytes"], single["total_bytes"],
+                self.budget.limit_bytes,
+            )
+        self.registry.counter("robust.admission_over_budget").inc()
+        if batch > 1 and single["total_bytes"] <= limit:
+            self.registry.counter("robust.admission_demotions").inc()
+            return AdmissionDecision(
+                "demote", est["total_bytes"], single["total_bytes"],
+                self.budget.limit_bytes,
+                reason=f"batch={batch} over budget; single-query fits",
+            )
+        self.registry.counter("robust.admission_rejections").inc()
+        return AdmissionDecision(
+            "reject", est["total_bytes"], single["total_bytes"],
+            self.budget.limit_bytes,
+            reason="predicted footprint exceeds budget even at batch=1",
+        )
+
+    def admit(self, prepared, batch: int = 1,
+              allow_demote: bool = False) -> AdmissionDecision:
+        d = self.decide(prepared, batch)
+        if d.action == "reject" or (d.action == "demote" and not allow_demote):
+            raise ResourceError(
+                f"admission rejected: predicted {d.predicted_bytes} bytes"
+                f" > budget {self.budget.limit_bytes}",
+                code="ADMISSION",
+                predicted_bytes=d.predicted_bytes,
+                limit_bytes=self.budget.limit_bytes,
+                batch=batch, action=d.action,
+            )
+        return d
+
+
+class PreparedCache:
+    """Fixed-capacity LRU for prepared queries: bounds compile-cache growth
+    under many distinct query shapes (each entry pins a traced executable
+    pair). Eviction order is least-recently-*used* — ``get`` refreshes."""
+
+    def __init__(self, capacity: int = 64,
+                 registry: MetricsRegistry | None = None):
+        if capacity < 1:
+            raise ValueError(f"PreparedCache capacity must be >= 1, got {capacity}")
+        self.capacity = capacity
+        self.registry = registry if registry is not None else REGISTRY
+        self._data: "OrderedDict[Any, Any]" = OrderedDict()
+
+    def get(self, key):
+        v = self._data.get(key)
+        if v is not None:
+            self._data.move_to_end(key)
+            self.registry.counter("engine.prepared_cache_hits").inc()
+        return v
+
+    def put(self, key, value) -> None:
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.registry.counter("engine.prepared_cache_evictions").inc()
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def __contains__(self, key) -> bool:
+        return key in self._data

@@ -38,6 +38,7 @@ import jax
 import jax.numpy as jnp
 
 from ..kernels.ref import bitgather_ref as _gather_packed
+from ..robust import faults as _faults
 
 
 def _memo_materialize(col, decode):
@@ -46,13 +47,19 @@ def _memo_materialize(col, decode):
     pinning a fresh full-width array per prepared query. Traced values
     (decode requested inside a jit trace, e.g. ``LCol.array`` in a complex
     measure expression) are never cached — a tracer escaping its trace would
-    poison every later call."""
+    poison every later call.
+
+    Fault site ``storage.materialize``: fires before the decode; corrupt-mode
+    specs transform only the *returned* value, after the memo read/write, so
+    the cached copy always holds the true decode (corrupt-then-restore)."""
+    _faults.fire("storage.materialize", kind=getattr(col, "kind", "?"))
     if col._dense is None:
         out = decode()
         if isinstance(out, jax.core.Tracer):
             return out
         col._dense = out
-    return col._dense
+        return _faults.corrupt("storage.materialize", out)
+    return _faults.corrupt("storage.materialize", col._dense)
 
 
 class DeviceColumn:

@@ -5,6 +5,7 @@ from repro.core.algebra import EntityStep, RelHop, SeedIds, SeedMask
 from repro.core.planner import NotRelationshipQuery, plan_query
 from repro.core.sql import parse
 from repro.data import synth_graph as SG
+from repro.robust.errors import ParseError, PlanError, QueryError
 
 
 @pytest.fixture(scope="module")
@@ -102,3 +103,79 @@ def test_parse_errors():
         parse("SELECT FROM x")
     with pytest.raises(SyntaxError):
         parse("SELECT a.b FROM T t WHERE a.b ~ 3")
+
+
+# ---------------------------------------------------------------------------
+# Typed-error sweep: every front-door failure must surface as a QueryError
+# subclass with machine-readable context — never a raw KeyError/IndexError.
+# ---------------------------------------------------------------------------
+
+
+def test_parse_error_taxonomy_and_position():
+    err = pytest.raises(ParseError, parse, "SELECT FROM x").value
+    assert isinstance(err, QueryError) and isinstance(err, SyntaxError)
+    assert err.code == "PARSE" and err.retryable is False
+    assert isinstance(err.context["position"], int)
+    assert err.context["near"] in err.context["query"]
+    d = err.to_dict()
+    assert d["error"] == "ParseError" and d["code"] == "PARSE"
+
+
+def test_parse_error_bad_character_has_position():
+    err = pytest.raises(ParseError, parse,
+                        "SELECT a.b FROM T t WHERE a.b ~ 3").value
+    q = "SELECT a.b FROM T t WHERE a.b ~ 3"
+    pos = err.context["position"]
+    assert "~" in q[pos:pos + 4], (pos, err.context["near"])
+
+
+@pytest.mark.parametrize("sql", [
+    "SELECT",                                  # truncated
+    "SELECT a.b FROM",                         # missing table
+    "SELECT a.b FROM T t WHERE",               # dangling WHERE
+    "SELECT a.b FROM T t WHERE a.b = ",        # dangling comparison
+    "SELECT a.b FROM T t GROUP BY",            # dangling GROUP BY
+    "SELECT a.b, FROM T t WHERE a.b = 1",      # trailing comma
+    "SELECT a.b FROM T t WHERE a.b IN (1",     # unclosed paren
+])
+def test_malformed_sql_never_raw_errors(sql):
+    with pytest.raises(ParseError):
+        parse(sql)
+
+
+def test_unknown_table_is_typed(pubmed):
+    err = pytest.raises(
+        QueryError, plan_query, pubmed,
+        parse("SELECT x.A FROM Nope x WHERE x.A = 1"),
+    ).value
+    assert isinstance(err, PlanError) and err.code == "PLAN"
+    assert err.retryable is False
+
+
+def test_unknown_where_variable_is_typed(pubmed):
+    bad = "SELECT dt.Doc, COUNT(*) FROM DT dt WHERE zz.Doc = 1 GROUP BY dt.Doc"
+    with pytest.raises(QueryError):
+        plan_query(pubmed, parse(bad))
+
+
+def test_unknown_group_by_variable_is_typed(pubmed):
+    # used to escape the planner as a raw KeyError on the alias map
+    bad = "SELECT dt.Doc, COUNT(*) FROM DT dt WHERE dt.Doc = 1 GROUP BY zz.Doc"
+    with pytest.raises(QueryError):
+        plan_query(pubmed, parse(bad))
+
+
+def test_unknown_column_is_typed(pubmed):
+    bad = ("SELECT dt.Nope, COUNT(*) FROM DT dt WHERE dt.Doc = 1"
+           " GROUP BY dt.Nope")
+    with pytest.raises(QueryError):
+        plan_query(pubmed, parse(bad))
+
+
+def test_not_relationship_query_is_plan_error(pubmed):
+    bad = "SELECT dt.Doc, COUNT(*) FROM DT dt GROUP BY dt.Doc"
+    err = pytest.raises(NotRelationshipQuery, plan_query,
+                        pubmed, parse(bad)).value
+    # the rejection class slots into the taxonomy (and stays a ValueError)
+    assert isinstance(err, PlanError) and isinstance(err, ValueError)
+    assert err.code == "PLAN"
