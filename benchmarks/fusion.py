@@ -1,0 +1,204 @@
+"""Pipelined fusion sweep: fused 2-hop regions vs the unfused composition.
+
+DESIGN.md §Pipelined fusion: a fused region executes hop1 → in-register mask →
+hop2 in ONE kernel pass, the intermediate frontier resident in VMEM scratch —
+the unfused composition materialises that frontier to HBM, reads it back for
+hop2, and pays a second dispatch. This suite sweeps a 2-hop chain whose first
+hop preserves source locality over seed selectivity 10⁻³ … 10⁻¹, both sides
+running ``block_skipping='auto'`` so the delta is fusion alone.
+
+What is gated (CI fast lane goes red on violation):
+
+  * ``bit_identical`` everywhere — the fused kernel applies the same ⊕ in the
+    same block order, so results must agree EXACTLY;
+  * ``speedup_hbm_model`` ≥ ``MIN_SPEEDUP_SELECTIVE`` wherever s ≤ 1e-2: the
+    fused-vs-unfused ratio of HBM bytes each path actually moves, counted
+    from the block lists the dispatchers really plan (roofline §: the hop
+    kernels are bandwidth-bound, ~0 FLOPs/byte, so on the TPU target the
+    byte ratio IS the speedup). The count charges fused honestly for its
+    reach-derived hop2 superset (it streams MORE edge blocks than the
+    support-planned unfused hop2) and undercounts unfused by ignoring its
+    separate mask-op traffic — the gate is a floor.
+
+Wall-clock on this CPU interpret backend is emitted per row
+(``wall_speedup``) but NOT gated: interpret cost is per-operand-per-step
+bookkeeping, so a fused step carrying both hops' operand sets costs ~2× an
+unfused step regardless of how little it computes — the exact inverse of the
+HBM economics the kernel is built for. (The selectivity suite CAN gate wall
+because eager bucketing shrinks step counts for both sides of its
+comparison.) At s = 0.1 the edge streams dominate both paths and the model
+ratio collapses toward 1× — that row is informational, showing the regime
+boundary.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from .common import emit, timeit
+
+SELECTIVITIES = (1e-3, 1e-2, 1e-1)
+MIN_SPEEDUP_SELECTIVE = 1.3
+
+N0, DEG1 = 131_072, 8   # hop1: E1 = 1,048,576 → 256 edge blocks
+N1, DEG2 = 131_072, 4   # hop2: E2 =   524,288 → 128 edge blocks
+N2 = 8_192
+LOCALITY = 2_048        # hop1 dst stays within ±LOCALITY of its source
+BATCH = 8
+
+#: streamed bytes per edge block: src + dst int32 + dense f32 measure
+BLOCK_BYTES = 4096 * 12
+F4 = 4  # f32 vector element
+
+
+def _chain(seed: int = 21):
+    """2-hop chain E0→E1→E2; hop1 locality-preserving so a narrow seed
+    support reaches a narrow band of hop2 blocks (reach-matrix pruning)."""
+    rng = np.random.default_rng(seed)
+    src1 = np.repeat(np.arange(N0, dtype=np.int32), DEG1)
+    dst1 = np.clip(
+        src1 + rng.integers(-LOCALITY, LOCALITY + 1, src1.shape[0]), 0, N1 - 1
+    ).astype(np.int32)
+    m1 = rng.random(src1.shape[0]).astype(np.float32)
+    src2 = np.repeat(np.arange(N1, dtype=np.int32), DEG2)
+    dst2 = rng.integers(0, N2, src2.shape[0]).astype(np.int32)
+    m2 = rng.random(src2.shape[0]).astype(np.float32)
+    mask = (rng.random(N1) < 0.8).astype(np.float32)
+    return src1, dst1, m1, src2, dst2, m2, mask
+
+
+def _frontier(selectivity: float) -> np.ndarray:
+    k = max(1, round(selectivity * N0))
+    w = np.zeros(N0, np.float32)
+    w[:k] = 1.0
+    return w
+
+
+def _planned_blocks(support: np.ndarray, blocks) -> int:
+    """Streamed block count for one unfused hop the way the eager dispatcher
+    plans it: per-block activity from the support cumsum, bucketed to the
+    fixed capacity the active kernel pads to (padded steps re-stream a
+    clamped block on hardware, so they count)."""
+    from repro.kernels import active
+
+    smin, smax = np.asarray(blocks[0]), np.asarray(blocks[1])
+    nb = smin.shape[0]
+    cs = np.concatenate([np.zeros(1, np.int64), np.cumsum(support.astype(np.int64))])
+    flags = cs[smax + 1] > cs[smin]
+    frac = flags.sum() / nb
+    if frac > active.SKIP_BLOCK_FRACTION:
+        return nb  # auto planner falls back to the full scan
+    return active.bucket_capacity(int(flags.sum()), nb)
+
+
+def run() -> None:
+    from repro.kernels import active, ops
+    from repro.kernels.params import EDGE_BLOCK
+
+    src1, dst1, m1, src2, dst2, m2, mask = _chain()
+    b1 = active.block_ranges(src1)
+    b2 = active.block_ranges(src2)
+    nb1 = active.n_edge_blocks(src1.shape[0])
+    # reach[b1, b2]: does hop1 block b1 write any mid id inside hop2 block b2
+    smin2, smax2 = np.asarray(b2[0]), np.asarray(b2[1])
+    reach = np.zeros((nb1, smin2.shape[0]), bool)
+    for i in range(nb1):
+        vals = dst1[i * EDGE_BLOCK:(i + 1) * EDGE_BLOCK]
+        reach[i] = (vals.min() <= smax2) & (vals.max() >= smin2)
+    h1 = ops.FusedHopOperands(src1, dst1, m1, None, N1, m_mode="dense",
+                              blocks=b1)
+    h2 = ops.FusedHopOperands(src2, dst2, m2, None, N2, m_mode="dense",
+                              blocks=b2, reach=reach)
+    failures: list[str] = []
+
+    def hbm_bytes(w: np.ndarray, batch: int):
+        """(unfused_bytes, fused_bytes, counts) for one execution, from the
+        block lists both dispatchers actually plan for this frontier."""
+        c1 = _planned_blocks(np.asarray(w != 0).any(0) if w.ndim == 2 else w != 0, b1)
+        # unfused hop2 plans from the REALIZED masked intermediate — run the
+        # real hop1 kernel to get it, exactly like _compose_unfused
+        u = np.asarray(ops.fragment_spmv_packed(
+            w if w.ndim == 1 else w.any(0).astype(np.float32),
+            src1, dst1, m1, None, n_dst=N1, m_mode="dense", op="sum",
+            blocks=b1, block_skipping="auto"))
+        u = np.where(mask > 0, u, 0.0)
+        c2_un = _planned_blocks(u != 0, b2)
+        # fused hop2 list: the reach superset the fused dispatch streams
+        bi1, na1, bi2, na2 = ops._fused_block_lists(
+            w, "sum", h1, h2, src1.shape[0], src2.shape[0], "auto")
+        c1_fu, c2_fu = int(bi1.shape[0]), int(bi2.shape[0])
+        unfused = (
+            batch * N0 * F4            # frontier read
+            + c1 * BLOCK_BYTES         # hop1 edge streams
+            + 2 * batch * N1 * F4      # intermediate u: HBM write + read back
+            + c2_un * BLOCK_BYTES      # hop2 edge streams
+            + batch * N2 * F4          # output write
+        )
+        fused = (
+            batch * N0 * F4
+            + c1_fu * BLOCK_BYTES
+            + c2_fu * BLOCK_BYTES      # reach superset: ≥ c2_un
+            + batch * N2 * F4          # u never leaves VMEM
+        )
+        return unfused, fused, (c1, c2_un, c1_fu, c2_fu)
+
+    def check(tag: str, unfused_fn, fused_fn, w, selectivity: float,
+              batch: int, gated: bool):
+        want = np.asarray(unfused_fn())
+        got = np.asarray(fused_fn())
+        bit = bool(np.array_equal(want, got))
+        t_un = timeit(lambda: unfused_fn().block_until_ready())
+        t_fu = timeit(lambda: fused_fn().block_until_ready())
+        ub, fb, counts = hbm_bytes(w, batch)
+        model = ub / fb
+        wall = t_un / t_fu
+        emit(
+            f"fusion/{tag}/s={selectivity:g}",
+            t_fu * 1e6,
+            f"model={model:.2f}x,wall={wall:.2f}x",
+            selectivity=selectivity,
+            unfused_us=round(t_un * 1e6, 1),
+            fused_us=round(t_fu * 1e6, 1),
+            wall_speedup=round(wall, 2),
+            unfused_hbm_bytes=ub,
+            fused_hbm_bytes=fb,
+            speedup_hbm_model=round(model, 2),
+            blocks_hop1=counts[0], blocks_hop2_unfused=counts[1],
+            blocks_hop1_fused=counts[2], blocks_hop2_fused=counts[3],
+            bit_identical=bit,
+        )
+        if not bit:
+            failures.append(f"{tag} s={selectivity:g}: fused != unfused")
+        if gated and model < MIN_SPEEDUP_SELECTIVE:
+            failures.append(
+                f"{tag} hbm-model speedup {model:.2f}x at s={selectivity:g} "
+                f"(gate {MIN_SPEEDUP_SELECTIVE}x)"
+            )
+
+    for s in SELECTIVITIES:
+        w = _frontier(s)
+        check(
+            "spmv",
+            lambda: ops.fragment_spmv_fused(
+                w, h1, h2, mask, op="sum", fusion="off",
+                block_skipping="auto"),
+            lambda: ops.fragment_spmv_fused(
+                w, h1, h2, mask, op="sum", fusion="on",
+                block_skipping="auto"),
+            w, s, batch=1, gated=s <= 1e-2,
+        )
+
+    # batched SpMM: B staggered seeds share one fused pass; the intermediate
+    # the unfused path round-trips is [B, n_mid], so pipelining pays B-fold
+    W = np.stack([np.roll(_frontier(1e-2), i * N0 // BATCH)
+                  for i in range(BATCH)])
+    check(
+        "spmm",
+        lambda: ops.fragment_spmm_fused(
+            W, h1, h2, mask, op="sum", fusion="off", block_skipping="auto"),
+        lambda: ops.fragment_spmm_fused(
+            W, h1, h2, mask, op="sum", fusion="on", block_skipping="auto"),
+        W, 1e-2, batch=BATCH, gated=True,
+    )
+
+    if failures:
+        raise RuntimeError("fusion gates failed: " + "; ".join(failures))

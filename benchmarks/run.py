@@ -103,6 +103,7 @@ def _update_perf_summary(suite: str, records: list[dict], seconds: float,
 def main() -> None:
     from . import (
         fig14_pipelining,
+        fusion,
         perf_baseline,
         fig15_parallel,
         selectivity,
@@ -125,6 +126,7 @@ def main() -> None:
         "perf": perf_baseline.run,
         "throughput": throughput.run,
         "selectivity": selectivity.run,
+        "fusion": fusion.run,
     }
     from .common import RECORDS
 

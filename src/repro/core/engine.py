@@ -18,6 +18,7 @@ from ..robust.errors import QueryError, ValidationError
 from . import executor as X
 from .algebra import ChainPlan
 from .fragments import FragmentIndex, build_index
+from .fuse import fuse_plan, fusion_groups, has_fused
 from .lower import PhysicalPlan, lower
 from .planner import plan_query
 from .schema import RelationshipTable, Schema
@@ -107,7 +108,10 @@ class PreparedQuery:
     batched_fn: Callable[..., Any] | None = None  # SpMM batch entry (frontier)
     strategy: str = "frontier"  # resolved (auto → the picked one)
     block_skipping: str = "auto"  # frontier-sparsity mode baked into fn
+    fusion: str = "auto"  # multi-hop fusion mode baked into fn
     hop_estimates: list[dict] | None = None  # per-hop selectivity estimates
+    plan_sig: str | None = None  # unfused op-signature (calibration key)
+    calibration: Any = None  # engine's CalibrationStore (shared, may be None)
     # observability handles (DESIGN.md §Observability): the device DB for
     # memory reports and the mesh/sharded-DB triple the distributed profiler
     # needs to rebuild prefix executables against the same placement
@@ -171,11 +175,14 @@ class PreparedQuery:
             f"query: {' '.join(self.sql.split())}",
             f"strategy: {self.strategy}",
             f"block_skipping: {self.block_skipping}",
+            f"fusion: {self.fusion}",
             f"params: {self.param_names}",
         ]
         if self.phys is not None:
             sig = " -> ".join(type(op).__name__ for op in self.phys.ops)
             lines.append(f"ops: {sig}")
+            for g in fusion_groups(self.phys):
+                lines.append(f"  fused region: {g}")
         for h in self.hop_estimates or []:
             lines.append(
                 f"  hop I_{h['table']}.{h['src_key']}: "
@@ -252,6 +259,37 @@ class PreparedQuery:
         return np.asarray(self.batched_fn(*args))[:B]
 
 
+class CalibrationStore:
+    """Observed per-hop active fractions keyed by (unfused) plan signature.
+
+    ``profile_prepared`` records what a real execution actually touched; the
+    next ``prepare`` of any query lowering to the same op shape consults the
+    observation in :meth:`GQFastEngine._pick_strategy` instead of trusting the
+    lower-time fanout model alone — profiling a workload once recalibrates
+    strategy choice for its whole plan family. Bounded (LRU-ish: dict
+    insertion order, oldest evicted) so long-lived engines cannot grow it
+    without limit."""
+
+    def __init__(self, max_entries: int = 256):
+        self.max_entries = max_entries
+        self._obs: dict[str, list[float]] = {}
+
+    def record(self, plan_sig: str, fractions: list) -> None:
+        vals = [float(f) for f in fractions if f is not None]
+        if not vals:
+            return
+        self._obs.pop(plan_sig, None)
+        self._obs[plan_sig] = vals
+        while len(self._obs) > self.max_entries:
+            self._obs.pop(next(iter(self._obs)))
+
+    def get(self, plan_sig: str) -> list[float] | None:
+        return self._obs.get(plan_sig)
+
+    def __len__(self) -> int:
+        return len(self._obs)
+
+
 class GQFastEngine:
     def __init__(self, db: GQFastDatabase, strategy: str = "frontier",
                  mesh=None, shard_axes: tuple[str, ...] = ("data",),
@@ -263,14 +301,23 @@ class GQFastEngine:
         # fixed-size LRU: each entry pins a traced executable pair, so the
         # prepare cache must not grow without bound under many query shapes
         self._cache: PreparedCache = PreparedCache(max_prepared)
+        # per-plan-signature observed active fractions (fed by profile runs)
+        self.calibration = CalibrationStore()
 
-    def prepare(self, sql: str, block_skipping: str = "auto") -> PreparedQuery:
+    def prepare(self, sql: str, block_skipping: str = "auto",
+                fusion: str = "auto") -> PreparedQuery:
         """Compile ``sql`` once for repeated execution. ``block_skipping``
         ('auto' | 'on' | 'off') sets the frontier-sparsity mode baked into the
         executable (DESIGN.md §Sparsity): 'auto' skips inactive edge blocks
         when the estimated/observed active fraction is small, 'on' forces the
-        scalar-prefetch kernels, 'off' always full-scans."""
-        from ..kernels.ops import BLOCK_SKIPPING_MODES
+        scalar-prefetch kernels, 'off' always full-scans. ``fusion`` ('auto' |
+        'on' | 'off') controls multi-hop region fusion (DESIGN.md §Pipelined
+        fusion): adjacent HopOp chains execute as one kernel pass with the
+        intermediate frontier resident in VMEM scratch; 'auto' additionally
+        falls back per-region when the intermediate would overflow the VMEM
+        budget. Frontier strategy only — fragment_loop and meshes always run
+        the unfused plan."""
+        from ..kernels.ops import BLOCK_SKIPPING_MODES, FUSION_MODES
 
         if block_skipping not in BLOCK_SKIPPING_MODES:
             raise ValidationError(
@@ -278,7 +325,12 @@ class GQFastEngine:
                 f"got {block_skipping!r}",
                 block_skipping=block_skipping, valid=BLOCK_SKIPPING_MODES,
             )
-        key = (sql, self.strategy, block_skipping)
+        if fusion not in FUSION_MODES:
+            raise ValidationError(
+                f"fusion must be one of {FUSION_MODES}, got {fusion!r}",
+                fusion=fusion, valid=FUSION_MODES,
+            )
+        key = (sql, self.strategy, block_skipping, fusion)
         cached = self._cache.get(key)
         if cached is not None:
             return cached
@@ -297,6 +349,9 @@ class GQFastEngine:
             except QueryError as e:
                 # every prepare-stage failure carries the query text
                 raise e.with_context(query=" ".join(sql.split()))
+            # the UNFUSED signature keys the calibration store, so a fused
+            # and an unfused prepare of the same shape share observations
+            plan_sig = " -> ".join(phys.op_signature())
             names = list(phys.param_names)
             bfn, sdb = None, None
             # the compile span covers executable construction; jax traces and
@@ -317,23 +372,35 @@ class GQFastEngine:
                 else:
                     strategy = self.strategy
                     if strategy == "auto":
-                        strategy = self._pick_strategy(plan)
-                    fn = X.STRATEGIES[strategy](
-                        self.db.device, phys, block_skipping=block_skipping
-                    )
+                        strategy = self._pick_strategy(plan, plan_sig)
+                    if strategy == "frontier" and fusion != "off":
+                        with T.span("fuse"):
+                            phys = fuse_plan(phys, fusion)
+                    if strategy == "frontier":
+                        fn = X.compile_frontier(
+                            self.db.device, phys,
+                            block_skipping=block_skipping, fusion=fusion,
+                        )
+                    else:
+                        fn = X.STRATEGIES[strategy](
+                            self.db.device, phys, block_skipping=block_skipping
+                        )
                     if strategy == "frontier" and names:
                         # the SpMM serving path: one edge stream per hop for
                         # the whole batch. fragment_loop keeps the vmap
                         # fallback so its batched results stay bit-identical
                         # to its own single-query calls.
                         bfn = X.compile_frontier_batched(
-                            self.db.device, phys, block_skipping=block_skipping
+                            self.db.device, phys,
+                            block_skipping=block_skipping, fusion=fusion,
                         )
-                csp.annotate(strategy=strategy, n_ops=len(phys.ops))
+                csp.annotate(strategy=strategy, n_ops=len(phys.ops),
+                             fused=has_fused(phys))
             pq = PreparedQuery(
                 sql, plan, fn, names, plan.group_entity, phys, bfn,
                 strategy=strategy, block_skipping=block_skipping,
-                hop_estimates=self._hop_fractions(plan),
+                fusion=fusion, hop_estimates=self._hop_fractions(plan),
+                plan_sig=plan_sig, calibration=self.calibration,
                 device_db=self.db.device, mesh=self.mesh,
                 shard_axes=self.shard_axes, sharded_db=sdb,
             )
@@ -342,12 +409,17 @@ class GQFastEngine:
 
     def _hop_fractions(self, plan: ChainPlan) -> list[dict]:
         """Per-hop estimated active fraction: seed cardinality pushed through
-        average fanouts. ``frontier_est × (E/h)`` edges are expected to be
-        touched out of E, the reached-destination count caps at the dst
-        domain, and a mask seed starts whole-domain (fraction 1). This is the
-        shared selectivity model behind ``_pick_strategy`` and the explain()
-        report; the runtime skip heuristic measures the real support instead
-        (kernels/ops.py)."""
+        p90 fanouts. ``frontier_est × p90(degree)`` edges are expected to be
+        touched out of E — the 90th-percentile fragment length rather than
+        the mean, because graph degree distributions are heavy-tailed and a
+        seed that lands on a hub makes the *average* a serious
+        under-prediction of touched work (the mispredict pattern the profile
+        counter kept flagging); p90 over-predicts the median seed slightly,
+        which only errs toward the throughput-safe frontier strategy. The
+        reached-destination count caps at the dst domain, and a mask seed
+        starts whole-domain (fraction 1). This is the shared selectivity
+        model behind ``_pick_strategy`` and the explain() report; the runtime
+        skip heuristic measures the real support instead (kernels/ops.py)."""
         from .algebra import RelHop, SeedIds
 
         if isinstance(plan.seed, SeedIds):
@@ -362,9 +434,12 @@ class GQFastEngine:
             idx = self.db.host_indexes[(s.table, s.src_key)]
             E = max(idx.num_edges, 1)
             h = max(idx.indptr.shape[0] - 1, 1)
+            degrees = np.diff(np.asarray(idx.indptr))
+            fanout = float(np.percentile(degrees, 90)) if degrees.size else 0.0
+            fanout = max(fanout, E / h)  # p90 never below the mean edge share
             if frontier_est is None:
                 frontier_est = float(h)
-            touched = min(frontier_est * (E / h), float(E))
+            touched = min(frontier_est * fanout, float(E))
             hops.append({
                 "table": s.table,
                 "src_key": s.src_key,
@@ -373,19 +448,26 @@ class GQFastEngine:
             frontier_est = min(touched, float(self.db.schema.domain_size(s.dst_entity)))
         return hops
 
-    def _pick_strategy(self, plan: ChainPlan) -> str:
+    def _pick_strategy(self, plan: ChainPlan, plan_sig: str | None = None) -> str:
         """Beyond-paper: cost-based strategy choice. The paper's fragment-at-a-
         time execution is *work-efficient* (touches only reachable fragments);
         the vectorized frontier pass is *throughput-efficient* (whole-relation
         SpMV). The seed-cardinality × fanout selectivity estimate
         (:meth:`_hop_fractions`) decides: if every hop touches a small
         fraction of its relation, the scalar fragment walk wins; once any hop
-        goes dense, the vectorized frontier does (EXPERIMENTS.md §Perf)."""
+        goes dense, the vectorized frontier does (EXPERIMENTS.md §Perf).
+        When the calibration store holds *observed* fractions for this plan
+        signature (a prior profile run of the same op shape), those replace
+        the model — measured reality beats the fanout estimate."""
         from .algebra import SeedIds
 
         if not isinstance(plan.seed, SeedIds):
             return "frontier"  # mask seeds are whole-domain already
-        fracs = [h["est_active_fraction"] for h in self._hop_fractions(plan)]
+        fracs = None
+        if plan_sig is not None:
+            fracs = self.calibration.get(plan_sig)
+        if fracs is None:
+            fracs = [h["est_active_fraction"] for h in self._hop_fractions(plan)]
         worst_fraction = max(fracs, default=1.0)
         # crossover measured on this host (benchmarks/perf_baseline): the scalar
         # loop wins while < ~15% of the relation is touched; on TPU the vector

@@ -58,6 +58,7 @@ from .fragments import FragmentIndex
 from .lower import (
     DegreeFilterOp,
     EntityFilterOp,
+    FusedHopOp,
     GroupOp,
     HopOp,
     LBin,
@@ -67,6 +68,7 @@ from .lower import (
     PhysicalPlan,
     SeedOp,
     eval_lexpr,
+    iter_flat_ops,
     lower,
 )
 from .schema import Schema
@@ -231,20 +233,25 @@ def densify_plan(phys: PhysicalPlan) -> PhysicalPlan:
             return LCall(e.fn, tuple(dexpr(a) for a in e.args))
         return e
 
-    new_ops = []
-    for op in phys.ops:
+    def dop(op):
         if isinstance(op, HopOp):
-            op = dataclasses.replace(
+            return dataclasses.replace(
                 op, dst_col=dcol(op.dst_col),
                 measure=dexpr(op.measure) if op.measure is not None else None,
             )
-        elif isinstance(op, SeedOp) and op.programs:
-            op = dataclasses.replace(
+        if isinstance(op, SeedOp) and op.programs:
+            return dataclasses.replace(
                 op, programs=tuple(densify_plan(p) for p in op.programs)
             )
-        elif isinstance(op, EntityFilterOp) and op.factor is not None:
-            op = dataclasses.replace(op, factor=dexpr(op.factor))
-        new_ops.append(op)
+        if isinstance(op, EntityFilterOp) and op.factor is not None:
+            return dataclasses.replace(op, factor=dexpr(op.factor))
+        if isinstance(op, FusedHopOp):
+            return dataclasses.replace(
+                op, members=tuple(dop(m) for m in op.members)
+            )
+        return op
+
+    new_ops = [dop(op) for op in phys.ops]
     return PhysicalPlan(
         tuple(new_ops), phys.param_names, phys.agg, phys.out_dom, phys.source
     )
@@ -292,7 +299,22 @@ def walk_ir(phys: PhysicalPlan, interp: "_Interp", stop: int | None = None):
 def _annotate_op_span(sp, op, state, interp) -> None:
     """Static + observed metadata for one op span: shapes, strategy knobs, and
     — for a HopOp with a concrete incoming frontier — the observed support and
-    surviving-block count (kernels/active.py metadata, computed on host)."""
+    surviving-block count (kernels/active.py metadata, computed on host). A
+    FusedHopOp region reports ONE span annotated with its member ops (the
+    region executes as one kernel pass), carrying the first hop's frontier
+    metadata — the analogue of fragment_loop's "(fused into enclosing op)"
+    convention."""
+    if isinstance(op, FusedHopOp):
+        sp.annotate(
+            fused=True,
+            members=[
+                f"Hop({m.table}.{m.src_key}->{m.dst_entity})"
+                if isinstance(m, HopOp) else type(m).__name__
+                for m in op.members
+            ],
+        )
+        _annotate_op_span(sp, op.hops[0], state, interp)
+        return
     if not isinstance(op, HopOp):
         return
     sp.annotate(
@@ -414,11 +436,27 @@ class _Interp:
             return self.entity_filter(op, state, cont)
         if isinstance(op, GroupOp):
             return self.group(op, state, cont)
+        if isinstance(op, FusedHopOp):
+            return self.fused_hop(op, state, cont)
         raise ExecutionError(
             f"no interpreter rule for op {type(op).__name__}",
             retryable=False, op=type(op).__name__,
             strategy=type(self).__name__,
         )
+
+    def fused_hop(self, op: "FusedHopOp", state, cont):
+        """Default semantics of a fused region: replay its member ops through
+        the ordinary per-op rules (CPS, so the scalar strategy's nested loops
+        come out identical to the unfused plan). Strategies with a true
+        single-pass kernel (frontier) override this."""
+        members = op.members
+
+        def go(i: int, st):
+            if i == len(members):
+                return cont(st)
+            return self.apply(members[i], st, lambda s2: go(i + 1, s2))
+
+        return go(0, state)
 
     def resolve(self, v):
         return self.params[v.name] if isinstance(v, LParam) else v
@@ -456,19 +494,24 @@ class _FrontierInterp(_Interp):
     # interp) must not branch per-hop: lax.cond with a psum inside one branch
     # deadlocks when shards disagree on the frontier. They opt out here.
     early_exit = True
+    # The edge-sharded interp also opts out of the single-pass fused-region
+    # kernel (its hops are shard-local segment reduces, no VMEM pipeline) and
+    # replays fused regions op-by-op via the generic rule instead.
+    fuse_kernels = True
 
     def __init__(self, params: dict[str, Any], sr: Semiring,
                  use_measures: bool = True, block_skipping: str = "auto",
-                 use_pallas: bool = True):
+                 use_pallas: bool = True, fusion: str = "auto"):
         super().__init__(params, sr, use_measures)
         self.block_skipping = block_skipping
         self.use_pallas = use_pallas
+        self.fusion = fusion
 
     def spawn(self) -> "_FrontierInterp":
         """Interpreter for a mask sub-program (always the boolean semiring)."""
         return _FrontierInterp(
             self.params, BOOL_OR_AND, block_skipping=self.block_skipping,
-            use_pallas=self.use_pallas,
+            use_pallas=self.use_pallas, fusion=self.fusion,
         )
 
     def blocks_for(self, op: HopOp):
@@ -595,6 +638,110 @@ class _FrontierInterp(_Interp):
             blocks=self.blocks_for(op), block_skipping=self.block_skipping,
         )
 
+    # -- pipelined fused regions (DESIGN.md §Pipelined fusion) --------------
+
+    def _hop_operands(self, op: HopOp, reach=None):
+        """One HopOp → the fused entry's :class:`FusedHopOperands` bundle, or
+        None when the hop has a shape the single-pass kernel cannot express
+        (batch-dependent measure expression) — the caller then replays the
+        region unfused."""
+        from ..kernels import ops as K
+
+        layout = self._packed_layout(op)
+        if layout is None:
+            dst_packed, m_operand, m_width, mdict = False, None, 0, None
+            m_mode = (
+                "dense"
+                if op.measure is not None and self.use_measures else "none"
+            )
+        else:
+            dst_packed, m_mode, m_operand, m_width, mdict = layout
+        if m_mode == "dense" and m_operand is None:
+            mv = jnp.asarray(
+                eval_lexpr(op.measure, self.params, self.scalars, self.col),
+                jnp.float32,
+            )
+            if mv.ndim >= 2:  # batch-dependent measure: no shared edge stream
+                return None
+            m_operand = jnp.broadcast_to(mv, (op.src_ids.shape[0],))
+        return K.FusedHopOperands(
+            src_ids=op.src_ids,
+            dst=op.dst_col.words if dst_packed else op.dst_col.materialize(),
+            measure=m_operand, mdict=mdict,
+            n_dst=op.dom_dst,
+            dst_width=op.dst_col.width if dst_packed else 0,
+            m_mode=m_mode, m_width=m_width,
+            blocks=self.blocks_for(op), reach=reach,
+        )
+
+    def _fused_region_args(self, op: FusedHopOp):
+        """Collect the region's kernel arguments: the two hop bundles, the
+        product of the member filters' constant masks, and whether hop2's
+        semijoin entry binarizes the intermediate. None ⇒ fall back to the
+        generic member-replay rule."""
+        hops = op.hops
+        h1_op = hops[0]
+        h2_op = hops[1] if len(hops) > 1 else None
+        hop1 = self._hop_operands(h1_op)
+        if hop1 is None:
+            return None
+        hop2 = None
+        if h2_op is not None:
+            hop2 = self._hop_operands(h2_op, reach=op.reach)
+            if hop2 is None:
+                return None
+        mid_mask = None
+        for f in op.mid_filters:
+            if f.const_mask is None:
+                continue
+            m = jnp.asarray(f.const_mask, jnp.float32)
+            mid_mask = m if mid_mask is None else mid_mask * m
+        mid_binarize = bool(h2_op.semijoin) if h2_op is not None else False
+        return h1_op, h2_op, hop1, hop2, mid_mask, mid_binarize
+
+    def _fused_call(self, w, hop1, hop2, mid_mask, mid_binarize):
+        from ..kernels import ops as K
+
+        return K.fragment_spmv_fused(
+            w, hop1, hop2, mid_mask, op=self.sr.name,
+            mid_binarize=mid_binarize, use_pallas=self.use_pallas,
+            fusion=self.fusion, block_skipping=self.block_skipping,
+        )
+
+    def fused_hop(self, op: FusedHopOp, state, cont):
+        """Single-pass execution of a fused region: hop1 accumulates into a
+        VMEM scratch frontier, the member filters' constant mask and hop2's
+        semijoin binarize apply in-register at the phase boundary, hop2
+        streams against the resident intermediate. The all-zero-frontier
+        short circuit wraps the whole region (one cond instead of two)."""
+        if not self.fuse_kernels or self.fusion == "off":
+            return super().fused_hop(op, state, cont)
+        args = self._fused_region_args(op)
+        if args is None:
+            return super().fused_hop(op, state, cont)
+        h1_op, h2_op, hop1, hop2, mid_mask, mid_binarize = args
+        sr, w = self.sr, state
+        if h1_op.semijoin:
+            w = sr.binarize(w)
+        n_out = hop2.n_dst if hop2 is not None else hop1.n_dst
+
+        def body(w):
+            return self._fused_call(w, hop1, hop2, mid_mask, mid_binarize)
+
+        if not self.early_exit:
+            out = body(w)
+        else:
+            out_shape = w.shape[:-1] + (n_out,)
+            out = jax.lax.cond(
+                jnp.count_nonzero(w != sr.zero) == 0,
+                lambda w: jnp.full(out_shape, sr.zero, jnp.float32),
+                body, w,
+            )
+        g = op.group
+        if g is not None and g.entity is None:
+            out = sr.to_mask(out)
+        return cont(out)
+
     def degree_filter(self, op: DegreeFilterOp, state, cont):
         return cont(self.sr.mask(state, self.degrees(op) > 0))
 
@@ -621,6 +768,7 @@ class _FrontierInterp(_Interp):
 def compile_frontier(
     db: DeviceDB, plan: ChainPlan | PhysicalPlan,
     block_skipping: str = "auto", use_pallas: bool = True,
+    fusion: str = "auto",
 ) -> Callable[..., jnp.ndarray]:
     phys = ensure_lowered(db, plan)
     names = list(phys.param_names)
@@ -632,7 +780,7 @@ def compile_frontier(
             phys,
             lambda sr, um: _FrontierInterp(
                 params, sr, um, block_skipping=block_skipping,
-                use_pallas=use_pallas,
+                use_pallas=use_pallas, fusion=fusion,
             ),
         )
 
@@ -662,15 +810,27 @@ class _BatchedFrontierInterp(_FrontierInterp):
 
     def __init__(self, params: dict[str, Any], sr: Semiring,
                  use_measures: bool = True, *, batch: int,
-                 block_skipping: str = "auto", use_pallas: bool = True):
+                 block_skipping: str = "auto", use_pallas: bool = True,
+                 fusion: str = "auto"):
         super().__init__(params, sr, use_measures,
-                         block_skipping=block_skipping, use_pallas=use_pallas)
+                         block_skipping=block_skipping, use_pallas=use_pallas,
+                         fusion=fusion)
         self.batch = batch
 
     def spawn(self) -> "_BatchedFrontierInterp":
         return _BatchedFrontierInterp(
             self.params, BOOL_OR_AND, batch=self.batch,
             block_skipping=self.block_skipping, use_pallas=self.use_pallas,
+            fusion=self.fusion,
+        )
+
+    def _fused_call(self, w, hop1, hop2, mid_mask, mid_binarize):
+        from ..kernels import ops as K
+
+        return K.fragment_spmm_fused(
+            w, hop1, hop2, mid_mask, op=self.sr.name,
+            mid_binarize=mid_binarize, use_pallas=self.use_pallas,
+            fusion=self.fusion, block_skipping=self.block_skipping,
         )
 
     def _seed_ids(self, i) -> jnp.ndarray:
@@ -771,6 +931,7 @@ class _BatchedFrontierInterp(_FrontierInterp):
 def compile_frontier_batched(
     db: DeviceDB, plan: ChainPlan | PhysicalPlan,
     block_skipping: str = "auto", use_pallas: bool = True,
+    fusion: str = "auto",
 ) -> Callable[..., jnp.ndarray]:
     """Batched serving entry: takes one [B] array per query parameter and
     returns the [B, out_dom] result block in one traced pass — every HopOp
@@ -792,7 +953,7 @@ def compile_frontier_batched(
             phys,
             lambda sr, um: _BatchedFrontierInterp(
                 params, sr, um, batch=B, block_skipping=block_skipping,
-                use_pallas=use_pallas,
+                use_pallas=use_pallas, fusion=fusion,
             ),
         )
 
@@ -877,7 +1038,7 @@ def compile_fragment_loop(
     phys = ensure_lowered(db, plan)
     seed_op = phys.ops[0]
     if seed_op.ids is None or any(
-        isinstance(op, HopOp) and op.semijoin for op in phys.ops
+        isinstance(op, HopOp) and op.semijoin for op in iter_flat_ops(phys)
     ):
         return compile_frontier(db, phys, block_skipping=block_skipping,
                                 use_pallas=use_pallas)
@@ -941,6 +1102,7 @@ class _DistributedInterp(_FrontierInterp):
     not a Pallas block stream, so there are no blocks to skip."""
 
     early_exit = False
+    fuse_kernels = False
 
     def __init__(self, params, sr, use_measures=True, *, edges=None, side=None,
                  axes=("data",), frontier_dtype=jnp.float32):

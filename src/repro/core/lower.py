@@ -233,7 +233,54 @@ class GroupOp:
     dom: int
 
 
-Op = Union[SeedOp, HopOp, DegreeFilterOp, EntityFilterOp, GroupOp]
+@dataclass(eq=False)
+class FusedHopOp:
+    """A pipelined region (DESIGN.md §Pipelined fusion): up to two adjacent
+    HopOps plus any interleaved constant-mask EntityFilterOps and the trailing
+    GroupOp, executed as ONE kernel pass. The first hop accumulates its output
+    frontier in a VMEM scratch accumulator, the mid filter mask is applied
+    in-register, and the second hop streams its edge blocks against the
+    VMEM-resident frontier — the intermediate ``[n_mid]`` vector never
+    round-trips through HBM.
+
+    ``members`` is the original op sub-sequence (order preserved), so any
+    interpreter without a fused kernel path replays them one by one and gets
+    bit-identical results. ``reach`` is an optional host-precomputed
+    ``bool[nb1, nb2]`` block-to-block reachability matrix: hop2's active block
+    list is derived from hop1's by OR-ing the rows of hop1's active blocks
+    (conservative: a skipped hop2 block provably reads only ⊕-identity)."""
+
+    members: tuple  # (HopOp | EntityFilterOp | GroupOp, ...)
+    n_mid: int  # intermediate entity domain (hop1.dom_dst)
+    reach: Any = None  # np.bool_[nb1, nb2] | None
+
+    @property
+    def hops(self) -> tuple:
+        return tuple(m for m in self.members if isinstance(m, HopOp))
+
+    @property
+    def mid_filters(self) -> tuple:
+        """Constant-mask EntityFilterOps between hop1 and hop2 (or after the
+        sole hop of a degenerate 1-hop region)."""
+        return tuple(m for m in self.members if isinstance(m, EntityFilterOp))
+
+    @property
+    def group(self):
+        last = self.members[-1]
+        return last if isinstance(last, GroupOp) else None
+
+
+Op = Union[SeedOp, HopOp, DegreeFilterOp, EntityFilterOp, GroupOp, FusedHopOp]
+
+
+def iter_flat_ops(phys: "PhysicalPlan"):
+    """Yield the plan's ops with FusedHopOp regions expanded to their members
+    (top level only — SeedOp sub-programs are separate plans)."""
+    for op in phys.ops:
+        if isinstance(op, FusedHopOp):
+            yield from op.members
+        else:
+            yield op
 
 
 @dataclass(eq=False)
@@ -268,6 +315,8 @@ class PhysicalPlan:
                     ) if c
                 )
                 return f"EntityFilter({op.entity}{flags})"
+            if isinstance(op, FusedHopOp):
+                return "Fused[" + "+".join(sig(m) for m in op.members) + "]"
             return f"Group({op.entity})"
 
         return [sig(op) for op in self.ops]

@@ -104,16 +104,27 @@ def _block_words(words: jnp.ndarray, width: int, n_blocks: int) -> jnp.ndarray:
 def _packed_operands(
     weights, src_ids, dst, measure, mdict,
     dst_width: int, m_mode: str, m_width: int, n_blocks: int, pad: int,
+    n_src: int | None = None,
 ):
     """Operand list + spec kinds for the packed kernels, shared by the scan and
     active variants of both the SpMV and the SpMM. Kinds: ``('resident',
     block_shape)`` (whole array, every grid step) | ``'edge'`` (EDGE_BLOCK
-    stream) | ``('words', width)`` (packed word stream, (G, width) blocks)."""
-    n_src = weights.shape[-1]
+    stream) | ``('words', width)`` (packed word stream, (G, width) blocks).
+
+    ``weights=None`` builds the operand set for a fused region's *second* hop
+    (:mod:`.fragment_spmv_fused`), whose frontier lives in a VMEM scratch
+    buffer rather than an input — ``n_src`` must then be given so the src
+    padding still lands one past the frontier (⊕-identity under the gather's
+    fill_value)."""
+    if n_src is None:
+        n_src = weights.shape[-1]
     if pad:
         src_ids = jnp.concatenate([src_ids, jnp.full(pad, n_src, jnp.int32)])
-    operands = [weights, src_ids]
-    kinds = [("resident", weights.shape), "edge"]
+    if weights is None:
+        operands, kinds = [src_ids], ["edge"]
+    else:
+        operands = [weights, src_ids]
+        kinds = [("resident", weights.shape), "edge"]
     if dst_width:
         operands.append(_block_words(dst, dst_width, n_blocks))
         kinds.append(("words", dst_width))

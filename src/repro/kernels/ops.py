@@ -25,6 +25,9 @@ the ⊕-identity); the XLA fallback always full-scans, which is the same result.
 """
 from __future__ import annotations
 
+import dataclasses
+from typing import Any
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -44,12 +47,22 @@ from .fragment_spmm import fragment_spmm_packed_active as _fragment_spmm_packed_
 from .fragment_spmv import IDENTITY as _IDENTITY
 from .fragment_spmv import fragment_spmv as _fragment_spmv
 from .fragment_spmv import fragment_spmv_active as _fragment_spmv_active
+from .fragment_spmv_fused import _apply_mask as _fused_apply_mask
+from .fragment_spmv_fused import _binarize as _fused_binarize
+from .fragment_spmv_fused import fragment_spmm_fused as _fragment_spmm_fused
+from .fragment_spmv_fused import fragment_spmv_fused as _fragment_spmv_fused
 from .fragment_spmv_packed import fragment_spmv_packed as _fragment_spmv_packed
 from .fragment_spmv_packed import (
     fragment_spmv_packed_active as _fragment_spmv_packed_active,
 )
+from .params import FUSED_VMEM_BUDGET_BYTES
 
 BLOCK_SKIPPING_MODES = ("off", "on", "auto")
+
+#: Pipelined-region dispatch: 'off' always composes the member hops through
+#: the unfused kernels, 'on' forces the fused kernel, 'auto' fuses unless the
+#: VMEM-resident intermediate (4·n_mid·B bytes) exceeds FUSED_VMEM_BUDGET_BYTES.
+FUSION_MODES = ("off", "on", "auto")
 
 
 def _interpret() -> bool:
@@ -243,6 +256,240 @@ def fragment_spmv_packed(weights, src_ids, dst, measure=None, mdict=None, *,
             m_mode=m_mode, m_width=m_width, op=op, interpret=_interpret(),
         ),
         scan,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Pipelined 2-hop fused dispatch (kernels/fragment_spmv_fused.py)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(eq=False)
+class FusedHopOperands:
+    """One hop's streams for the fused entries. The frontier is *not* here:
+    hop1 reads the caller's ``weights``, hop2 reads the VMEM scratch. ``reach``
+    (hop2 only) is the fuse-time block reachability matrix ``bool[nb1, nb2]``
+    that derives hop2's active block list from hop1's."""
+
+    src_ids: Any
+    dst: Any
+    measure: Any = None
+    mdict: Any = None
+    n_dst: int = 0
+    dst_width: int = 0
+    m_mode: str = "none"
+    m_width: int = 0
+    blocks: Any = None  # (src_min, src_max) | None
+    reach: Any = None
+
+
+def _coerce_hop(h: FusedHopOperands):
+    s = jnp.asarray(h.src_ids, jnp.int32)
+    d = jnp.asarray(h.dst, jnp.uint32 if h.dst_width else jnp.int32)
+    m = h.measure
+    if h.m_mode == "dense":
+        m = jnp.asarray(m, jnp.float32)
+    elif h.m_mode in ("packed", "dict"):
+        m = jnp.asarray(m, jnp.uint32)
+    elif h.m_mode != "none":
+        raise ValidationError(
+            f"unknown measure mode {h.m_mode!r}", m_mode=h.m_mode,
+        )
+    md = jnp.asarray(h.mdict, jnp.float32) if h.m_mode == "dict" else None
+    return s, d, m, md
+
+
+def _fusion_unfusable(fusion: str, n_mid: int, batch: int) -> bool:
+    if fusion not in FUSION_MODES:
+        raise ValidationError(
+            f"unknown fusion mode {fusion!r}", fusion=fusion, valid=FUSION_MODES,
+        )
+    if fusion == "off":
+        return True
+    if fusion == "on":
+        return False
+    return 4 * n_mid * max(batch, 1) > FUSED_VMEM_BUDGET_BYTES
+
+
+def _full_blocks(nb: int):
+    return jnp.arange(nb, dtype=jnp.int32), jnp.asarray([nb], jnp.int32)
+
+
+def _np_block_list(flags: np.ndarray):
+    """Bucketed fixed-capacity list from eager flags (active.py layout)."""
+    act = np.flatnonzero(flags).astype(np.int32)
+    nb = int(flags.shape[0])
+    C = _active.bucket_capacity(int(act.shape[0]), nb)
+    idx = np.full(C, act[-1] if act.size else 0, np.int32)
+    idx[: act.shape[0]] = act
+    return jnp.asarray(idx), jnp.asarray([act.shape[0]], dtype=jnp.int32)
+
+
+def _fused_block_lists(w, op: str, h1, h2, E1: int, E2: int,
+                       block_skipping: str):
+    """The fused grid's two prefetched block lists. hop1's comes from the
+    incoming frontier's support exactly as in the unfused active kernels;
+    hop2's is derived WITHOUT reading the intermediate frontier, by OR-ing the
+    reach-matrix rows of hop1's active blocks (conservative superset → results
+    stay bit-identical). Skipping off/unavailable passes full arange lists —
+    one kernel body serves every mode."""
+    if block_skipping not in BLOCK_SKIPPING_MODES:
+        raise ValidationError(
+            f"unknown block_skipping mode {block_skipping!r}",
+            block_skipping=block_skipping, valid=BLOCK_SKIPPING_MODES,
+        )
+    nb1 = _active.n_edge_blocks(E1)
+    zero = _IDENTITY[op]
+    skip1 = (
+        block_skipping != "off" and h1.blocks is not None
+        and not (nb1 <= 1 and block_skipping != "on")
+    )
+    traced = isinstance(w, jax.core.Tracer)
+    flags1_t = flags1_np = None
+    if not skip1:
+        bi1, na1 = _full_blocks(nb1)
+    elif traced:
+        smin1, smax1 = h1.blocks
+        flags1_t = _active.active_flags(
+            _active.support_mask(w, zero), jnp.asarray(smin1), jnp.asarray(smax1)
+        )
+        bi1, na1 = _active.compact_blocks(flags1_t)
+        _obs_trace.annotate(skip_tier="traced", n_blocks=nb1)
+    else:
+        smin1, smax1 = h1.blocks
+        sup = np.asarray(_active.support_mask(w, zero)).astype(np.int64)
+        cs = np.concatenate([np.zeros(1, np.int64), np.cumsum(sup)])
+        flags1_np = cs[np.asarray(smax1) + 1] > cs[np.asarray(smin1)]
+        frac = flags1_np.sum() / nb1
+        if block_skipping == "auto" and frac > _active.SKIP_BLOCK_FRACTION:
+            bi1, na1 = _full_blocks(nb1)
+            flags1_np = None
+            _obs_trace.annotate(skip_tier="eager", skip_decision="scan",
+                                n_blocks=nb1)
+        else:
+            bi1, na1 = _np_block_list(flags1_np)
+            _obs_trace.annotate(
+                skip_tier="eager", skip_decision="skip", n_blocks=nb1,
+                active_blocks=int(flags1_np.sum()),
+                active_block_fraction=float(frac),
+            )
+    if h2 is None:
+        return bi1, na1, None, None
+    nb2 = _active.n_edge_blocks(E2)
+    reach = h2.reach
+    ok_reach = (
+        reach is not None
+        and tuple(np.asarray(reach).shape) == (nb1, nb2)
+    )
+    if ok_reach and flags1_t is not None:
+        flags2 = jnp.any(jnp.asarray(reach, bool) & flags1_t[:, None], axis=0)
+        bi2, na2 = _active.compact_blocks(flags2)
+    elif ok_reach and flags1_np is not None:
+        flags2 = np.asarray(reach, bool)[flags1_np].any(axis=0)
+        bi2, na2 = _np_block_list(flags2)
+    else:
+        bi2, na2 = _full_blocks(nb2)
+    return bi1, na1, bi2, na2
+
+
+def _compose_unfused(packed_fn, weights, hop1, hop2, mid_mask,
+                     mid_binarize: bool, op: str, use_pallas: bool,
+                     block_skipping: str):
+    """The member hops through the unfused kernels (fusion off / VMEM budget
+    exceeded / empty relation) — the reference semantics the fused kernel must
+    match bit-for-bit."""
+    u = packed_fn(
+        weights, hop1.src_ids, hop1.dst, hop1.measure, hop1.mdict,
+        n_dst=hop1.n_dst, dst_width=hop1.dst_width, m_mode=hop1.m_mode,
+        m_width=hop1.m_width, op=op, use_pallas=use_pallas,
+        blocks=hop1.blocks, block_skipping=block_skipping,
+    )
+    if mid_mask is not None:
+        keep = mid_mask[None, :] if u.ndim == 2 else mid_mask
+        u = _fused_apply_mask(u, keep, op)
+    if hop2 is None:
+        return u
+    if mid_binarize:
+        u = _fused_binarize(u, op)
+    return packed_fn(
+        u, hop2.src_ids, hop2.dst, hop2.measure, hop2.mdict,
+        n_dst=hop2.n_dst, dst_width=hop2.dst_width, m_mode=hop2.m_mode,
+        m_width=hop2.m_width, op=op, use_pallas=use_pallas,
+        blocks=hop2.blocks, block_skipping=block_skipping,
+    )
+
+
+def _fused_dispatch(batched: bool, weights, hop1, hop2, mid_mask, *, op,
+                    mid_binarize, use_pallas, fusion, block_skipping):
+    w = jnp.asarray(weights, jnp.float32)
+    mm = jnp.asarray(mid_mask, jnp.float32) if mid_mask is not None else None
+    E1 = hop1.src_ids.shape[0]
+    E2 = hop2.src_ids.shape[0] if hop2 is not None else 0
+    n_mid = hop1.n_dst
+    n_dst = hop2.n_dst if hop2 is not None else hop1.n_dst
+    batch = w.shape[0] if batched else 1
+    packed_fn = fragment_spmm_packed if batched else fragment_spmv_packed
+    if (
+        not use_pallas
+        or _fusion_unfusable(fusion, n_mid, batch)
+        or E1 == 0
+        or (hop2 is not None and E2 == 0)
+    ):
+        return _compose_unfused(
+            packed_fn, w, hop1, hop2, mm, mid_binarize, op,
+            use_pallas, block_skipping,
+        )
+    site = "ops.fragment_spmm_fused" if batched else "ops.fragment_spmv_fused"
+    _faults.fire(site, op=op, n_dst=n_dst)
+    s1, d1, m1, md1 = _coerce_hop(hop1)
+    s2, d2, m2, md2 = _coerce_hop(hop2) if hop2 is not None else (None,) * 4
+    # plan from the caller's original frontier: a numpy frontier then plans
+    # entirely on the host, with no device round-trip for the support scan
+    bi1, na1, bi2, na2 = _fused_block_lists(
+        w if isinstance(w, jax.core.Tracer) else weights,
+        op, hop1, hop2, E1, E2, block_skipping
+    )
+    _obs_trace.annotate(fused=True, fused_hops=2 if hop2 is not None else 1)
+    kern = _fragment_spmm_fused if batched else _fragment_spmv_fused
+    return kern(
+        w, s1, d1, m1, md1, s2, d2, m2, md2, mm, bi1, na1, bi2, na2,
+        n_mid=n_mid, n_dst=n_dst,
+        dst1_width=hop1.dst_width, m1_mode=hop1.m_mode, m1_width=hop1.m_width,
+        dst2_width=hop2.dst_width if hop2 is not None else 0,
+        m2_mode=hop2.m_mode if hop2 is not None else "none",
+        m2_width=hop2.m_width if hop2 is not None else 0,
+        op=op, mid_binarize=mid_binarize and hop2 is not None,
+        interpret=_interpret(),
+    )
+
+
+def fragment_spmv_fused(weights, hop1: FusedHopOperands,
+                        hop2: FusedHopOperands | None = None, mid_mask=None,
+                        *, op: str = "sum", mid_binarize: bool = False,
+                        use_pallas: bool = True, fusion: str = "auto",
+                        block_skipping: str = "off"):
+    """Pipelined fused region: hop1 → in-register mask/binarize → hop2 in one
+    kernel pass, the intermediate frontier resident in VMEM scratch
+    (``hop2=None`` ⇒ degenerate 1-hop+filter region). Bit-identical to the
+    unfused two-call composition on every op × encoding × skip mode."""
+    return _fused_dispatch(
+        False, weights, hop1, hop2, mid_mask, op=op,
+        mid_binarize=mid_binarize, use_pallas=use_pallas, fusion=fusion,
+        block_skipping=block_skipping,
+    )
+
+
+def fragment_spmm_fused(weights, hop1: FusedHopOperands,
+                        hop2: FusedHopOperands | None = None, mid_mask=None,
+                        *, op: str = "sum", mid_binarize: bool = False,
+                        use_pallas: bool = True, fusion: str = "auto",
+                        block_skipping: str = "off"):
+    """Batched pipelined region: B queries share the single fused pass, the
+    ``[B, n_mid]`` intermediate resident in VMEM scratch."""
+    return _fused_dispatch(
+        True, weights, hop1, hop2, mid_mask, op=op,
+        mid_binarize=mid_binarize, use_pallas=use_pallas, fusion=fusion,
+        block_skipping=block_skipping,
     )
 
 

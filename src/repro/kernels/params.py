@@ -14,3 +14,11 @@ the constant lives here and nowhere else.
 from __future__ import annotations
 
 EDGE_BLOCK = 4096  # edges per grid step; must stay a multiple of 1024
+
+#: VMEM budget for the fused 2-hop kernels' resident intermediate frontier
+#: (:mod:`.fragment_spmv_fused`). The fused kernel keeps the full ``[n_mid]``
+#: (or ``[B, n_mid]``) f32 accumulator in a VMEM scratch buffer for the whole
+#: grid; ``fusion="auto"`` falls back to the unfused two-kernel path when
+#: ``4 · n_mid · B`` exceeds this. 8 MiB leaves headroom for the edge-block
+#: operands and the output block on a 16 MiB-VMEM TPU core.
+FUSED_VMEM_BUDGET_BYTES = 8 * 2**20

@@ -56,7 +56,12 @@ def fragment_spmv_ref(
         return jax.ops.segment_sum(ws * measures, dst_ids, num_segments=n_dst)
     if op == "bool":
         ew = ((ws > 0) & (measures != 0)).astype(jnp.float32)
-        return jax.ops.segment_max(ew, dst_ids, num_segments=n_dst)
+        # clamp segment_max's empty-segment fill (-inf) to the bool
+        # ⊕-identity 0 — the kernels initialize with IDENTITY['bool'] and a
+        # downstream binarize must see the same representation
+        return jnp.maximum(
+            jax.ops.segment_max(ew, dst_ids, num_segments=n_dst), 0.0
+        )
     zero = float("inf") if op == "min" else float("-inf")
     ew = jnp.where(ws == zero, zero, ws * measures)  # ∞·0 guard
     seg = jax.ops.segment_min if op == "min" else jax.ops.segment_max
@@ -133,6 +138,75 @@ def fragment_spmm_packed_ref(
         idx = bitunpack_ref(measure, m_width, E)
         m = jnp.take(mdict, idx) if m_mode == "dict" else idx.astype(jnp.float32)
     return fragment_spmm_ref(weights, src_ids, d, m, n_dst, op=op)
+
+
+def _mid_transform_ref(u, mid_mask, mid_binarize: bool, op: str):
+    """The fused region's phase boundary: constant filter mask then hop2's
+    semijoin binarize — mirrors ``Semiring.mask`` / ``Semiring.binarize``."""
+    zero = {"sum": 0.0, "bool": 0.0, "min": float("inf"), "max": float("-inf")}[op]
+    if mid_mask is not None:
+        keep = mid_mask[None, :] if u.ndim == 2 else mid_mask
+        u = jnp.where(keep > 0, u, zero)
+    if mid_binarize:
+        if op == "sum":
+            u = (u > 0).astype(jnp.float32)
+        else:
+            u = jnp.where(u != zero, jnp.float32(1.0), jnp.float32(zero))
+    return u
+
+
+def fragment_spmv_fused_ref(
+    weights: jnp.ndarray,
+    src1, dst1, m1, md1,
+    src2, dst2, m2, md2,
+    mid_mask,
+    n_mid: int,
+    n_dst: int,
+    dst1_width: int = 0, m1_mode: str = "none", m1_width: int = 0,
+    dst2_width: int = 0, m2_mode: str = "none", m2_width: int = 0,
+    op: str = "sum",
+    mid_binarize: bool = False,
+) -> jnp.ndarray:
+    """Oracle for the pipelined 2-hop region: hop1 → mask/binarize → hop2, each
+    stage through the existing per-hop oracles (``src2=None`` ⇒ degenerate
+    1-hop+filter region, where the mask applies to the output domain)."""
+    u = fragment_spmv_packed_ref(
+        weights, src1, dst1, m1, md1, n_mid,
+        dst_width=dst1_width, m_mode=m1_mode, m_width=m1_width, op=op,
+    )
+    if src2 is None:
+        return _mid_transform_ref(u, mid_mask, False, op)
+    u = _mid_transform_ref(u, mid_mask, mid_binarize, op)
+    return fragment_spmv_packed_ref(
+        u, src2, dst2, m2, md2, n_dst,
+        dst_width=dst2_width, m_mode=m2_mode, m_width=m2_width, op=op,
+    )
+
+
+def fragment_spmm_fused_ref(
+    weights: jnp.ndarray,  # f32[B, n_src]
+    src1, dst1, m1, md1,
+    src2, dst2, m2, md2,
+    mid_mask,
+    n_mid: int,
+    n_dst: int,
+    dst1_width: int = 0, m1_mode: str = "none", m1_width: int = 0,
+    dst2_width: int = 0, m2_mode: str = "none", m2_width: int = 0,
+    op: str = "sum",
+    mid_binarize: bool = False,
+) -> jnp.ndarray:
+    """Batched oracle for the pipelined region (B rows through both hops)."""
+    u = fragment_spmm_packed_ref(
+        weights, src1, dst1, m1, md1, n_mid,
+        dst_width=dst1_width, m_mode=m1_mode, m_width=m1_width, op=op,
+    )
+    if src2 is None:
+        return _mid_transform_ref(u, mid_mask, False, op)
+    u = _mid_transform_ref(u, mid_mask, mid_binarize, op)
+    return fragment_spmm_packed_ref(
+        u, src2, dst2, m2, md2, n_dst,
+        dst_width=dst2_width, m_mode=m2_mode, m_width=m2_width, op=op,
+    )
 
 
 def bitmap_and_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

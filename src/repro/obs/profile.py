@@ -13,7 +13,11 @@
     ``frontier`` and ``fragment_loop`` strategies these come from one eager
     (un-jitted) instrumented walk of the same interpreter the strategy
     compiles (``executor.walk_ir`` emits nested spans when a tracer is
-    recording); ops fused inside a traced region (the scalar strategy's nested
+    recording), then rescaled proportionally so the self-wall column sums to
+    ``total_wall_ms`` (``timing_method: "eager-span-scaled"``; the raw eager
+    walls are kept in each op's meta) — the eager walk is a *relative*
+    attribution, while the compiled executable sets the absolute scale. Ops
+    fused inside a traced region (the scalar strategy's nested
     loops) are marked ``fused`` and charge their time to the enclosing op. The
     ``distributed`` strategy cannot run its interpreter eagerly (collectives
     need the mesh), so per-op times are prefix deltas: the plan's k-op
@@ -109,7 +113,7 @@ class QueryProfile:
     hops: list[HopProfile]
     memory: dict | None = None
     spans: dict | None = None  # raw span tree from the instrumented walk
-    timing_method: str = "eager-span"  # | "prefix-delta"
+    timing_method: str = "eager-span"  # | "eager-span-scaled" | "prefix-delta"
 
     def to_dict(self) -> dict:
         return {
@@ -223,11 +227,14 @@ def observed_hop_fractions(phys, params: dict) -> list[dict]:
 def _support_walk(phys, params: dict, hops_out: list[dict] | None) -> np.ndarray:
     from ..core.lower import (
         DegreeFilterOp, EntityFilterOp, GroupOp, HopOp, LParam, SeedOp,
+        iter_flat_ops,
     )
 
     np_col = lambda c: np.asarray(c.array)
     sup: np.ndarray | None = None
-    for op in phys.ops:
+    # flattened: a FusedHopOp's member hops are observed individually — the
+    # support propagation is structural, identical fused or not
+    for op in iter_flat_ops(phys):
         if isinstance(op, SeedOp):
             if op.ids is not None:
                 ids = [
@@ -339,10 +346,12 @@ def _op_records_eager(pq, params: dict):
 
     phys = pq.phys
     jparams = {n: jnp.asarray(v) for n, v in params.items()}
+    fusion = getattr(pq, "fusion", "auto")
     if pq.strategy == "fragment_loop":
         seed_op = phys.ops[0]
         scalar_ok = seed_op.ids is not None and not any(
-            isinstance(op, X.HopOp) and op.semijoin for op in phys.ops
+            isinstance(op, X.HopOp) and op.semijoin
+            for op in X.iter_flat_ops(phys)
         )
         if scalar_ok:
             phys = X.densify_plan(phys)
@@ -351,17 +360,44 @@ def _op_records_eager(pq, params: dict):
             )
         else:  # compile_fragment_loop's documented frontier fallback
             mk = lambda sr, um: X._FrontierInterp(
-                jparams, sr, um, block_skipping=pq.block_skipping
+                jparams, sr, um, block_skipping=pq.block_skipping,
+                fusion=fusion,
             )
     else:
         mk = lambda sr, um: X._FrontierInterp(
-            jparams, sr, um, block_skipping=pq.block_skipping
+            jparams, sr, um, block_skipping=pq.block_skipping, fusion=fusion,
         )
     with T.recording():  # warm the eager path (lax.cond/pallas caches)
         X.execute_ir(phys, mk)
     with T.recording() as tr:
         X.execute_ir(phys, mk)
     return _records_from_tracer(tr, phys), tr.to_dict()
+
+
+def _rescale_eager_ops(ops: list[OpProfile], total_ms: float) -> list[OpProfile]:
+    """Reconcile eager per-op times with the compiled end-to-end measurement.
+
+    The eager instrumented walk runs un-jitted (and, on CPU, interpret-mode
+    Pallas), so its absolute per-op walls can be orders of magnitude above the
+    compiled executable's ``total_wall_ms`` — useful as *relative* attribution,
+    nonsense as absolute numbers (per-op sums of seconds against a
+    millisecond total). Rescale every measured op proportionally so the
+    self-wall column sums to ``total_ms`` exactly; the raw eager measurements
+    are preserved per op as ``meta.eager_wall_ms`` / ``meta.eager_kernel_ms``."""
+    walls = [o.wall_ms for o in ops if o.wall_ms is not None]
+    tot = float(sum(walls))
+    if tot <= 0.0 or total_ms <= 0.0:
+        return ops
+    scale = total_ms / tot
+    for o in ops:
+        if o.wall_ms is None:
+            continue
+        o.meta["eager_wall_ms"] = round(o.wall_ms, 4)
+        o.wall_ms = o.wall_ms * scale
+        if o.kernel_ms is not None:
+            o.meta["eager_kernel_ms"] = round(o.kernel_ms, 4)
+            o.kernel_ms = min(o.kernel_ms * scale, o.wall_ms)
+    return ops
 
 
 def _op_records_prefix(pq, args: list, reps: int = 2):
@@ -449,6 +485,14 @@ def profile_prepared(pq, params: dict, reps: int = 3) -> QueryProfile:
         ))
     REGISTRY.counter("profile_runs").inc()
 
+    # feed the engine's calibration store: the next prepare of the same plan
+    # shape picks its strategy from what this execution actually touched
+    calib = getattr(pq, "calibration", None)
+    if calib is not None and getattr(pq, "plan_sig", None):
+        calib.record(
+            pq.plan_sig, [h.observed_active_fraction for h in hops]
+        )
+
     # per-op timings
     if pq.strategy == "distributed":
         if pq.mesh is None or pq.device_db is None:
@@ -459,22 +503,33 @@ def profile_prepared(pq, params: dict, reps: int = 3) -> QueryProfile:
     else:
         ops, spans = _op_records_eager(pq, params)
         method = "eager-span"
+        ops = _rescale_eager_ops(ops, total_ms)
+        if any("eager_wall_ms" in o.meta for o in ops):
+            method = "eager-span-scaled"
 
-    # fold observed-fraction metadata onto the matching HopOp records
-    from ..core.lower import HopOp
+    # fold observed-fraction metadata onto the matching op records: a plain
+    # HopOp consumes one HopProfile, a FusedHopOp consumes one per member hop
+    # (its single span gets the first member's fractions)
+    from ..core.lower import FusedHopOp, HopOp
 
     hop_iter = iter(hops)
     for i, op in enumerate(phys.ops):
-        if isinstance(op, HopOp) and i < len(ops):
-            h = next(hop_iter, None)
-            if h is not None:
-                ops[i].meta.setdefault("est_active_fraction", h.est_active_fraction)
-                ops[i].meta.setdefault(
-                    "observed_active_fraction", h.observed_active_fraction
-                )
-                for k in ("active_blocks", "n_blocks"):
-                    if k in h.meta:
-                        ops[i].meta.setdefault(k, h.meta[k])
+        if isinstance(op, FusedHopOp):
+            member_hops = op.hops
+        elif isinstance(op, HopOp):
+            member_hops = (op,)
+        else:
+            continue
+        hs = [next(hop_iter, None) for _ in member_hops]
+        h = hs[0]
+        if h is not None and i < len(ops):
+            ops[i].meta.setdefault("est_active_fraction", h.est_active_fraction)
+            ops[i].meta.setdefault(
+                "observed_active_fraction", h.observed_active_fraction
+            )
+            for k in ("active_blocks", "n_blocks"):
+                if k in h.meta:
+                    ops[i].meta.setdefault(k, h.meta[k])
 
     memory = None
     if pq.device_db is not None:

@@ -79,7 +79,7 @@ def _plan_working_bytes(phys, batch: int, hop_estimates=None) -> int:
     expected touched edge stream. AVG runs the walk twice in one program
     (fused SUM+COUNT) → double the frontier term. Mask-seed sub-programs
     recurse with the boolean semiring (same widths)."""
-    from ..core.lower import GroupOp, HopOp, SeedOp
+    from ..core.lower import GroupOp, HopOp, SeedOp, iter_flat_ops
 
     doms: list[int] = []
     edge_bytes = 0
@@ -87,7 +87,10 @@ def _plan_working_bytes(phys, batch: int, hop_estimates=None) -> int:
         (h["table"], h["src_key"]): h["est_active_fraction"]
         for h in (hop_estimates or [])
     }
-    for op in phys.ops:
+    # flattened walk: a FusedHopOp's member hops still stream their edges and
+    # hold a live intermediate (the VMEM scratch), so the model charges them
+    # exactly as it charges the unfused plan
+    for op in iter_flat_ops(phys):
         if isinstance(op, SeedOp):
             doms.append(op.dom)
             for prog in op.programs:

@@ -14,7 +14,11 @@ under a fault-tolerance policy instead of letting exceptions escape:
     the result is annotated degraded::
 
         active          the prepared executable as compiled (block-skipping
-                        scalar-prefetch kernels where engaged)
+                        scalar-prefetch kernels where engaged, fused multi-hop
+                        regions where the fusion pass formed them)
+        unfused         the same plan with fused regions expanded back to
+                        per-hop kernel calls (fusion="off") — sheds the
+                        pipelined fused kernels, keeps block skipping
         scan            plain full-scan kernels (block_skipping="off") —
                         sheds the scalar-prefetch machinery
         xla             the pure-XLA reference math (use_pallas=False) —
@@ -54,7 +58,7 @@ from .errors import DeadlineExceeded, QueryError, wrap_execution_error
 
 #: Rungs in demotion order. ``run_with_policy`` starts at the first rung and
 #: walks right on failure; see module docstring for what each sheds.
-LADDER = ("active", "scan", "xla", "fragment_loop")
+LADDER = ("active", "unfused", "scan", "xla", "fragment_loop")
 
 
 # ---------------------------------------------------------------------------
@@ -218,19 +222,30 @@ def rung_fn(prepared, rung: str, batched: bool = False):
 
     from ..core import executor as X
 
+    from ..core.fuse import unfuse_plan
+
     db, phys = prepared.device_db, prepared.phys
+    # every rung below "active" runs the unfused twin of the plan: a fault in
+    # the fused kernel dispatch must not follow the query down the ladder
+    # (the frontier interps replay fused regions per-op only when told to)
+    uphys = unfuse_plan(phys) if phys is not None else phys
     if rung == "active":
         fn = prepared.batched_fn if batched else prepared.fn
         if batched and fn is None:  # strategies without a batched entry
             fn = jax.vmap(prepared.fn)
+    elif rung == "unfused":
+        mk = X.compile_frontier_batched if batched else X.compile_frontier
+        fn = mk(db, uphys, block_skipping=prepared.block_skipping,
+                fusion="off")
     elif rung == "scan":
         mk = X.compile_frontier_batched if batched else X.compile_frontier
-        fn = mk(db, phys, block_skipping="off")
+        fn = mk(db, uphys, block_skipping="off", fusion="off")
     elif rung == "xla":
         mk = X.compile_frontier_batched if batched else X.compile_frontier
-        fn = mk(db, phys, block_skipping="off", use_pallas=False)
+        fn = mk(db, uphys, block_skipping="off", use_pallas=False,
+                fusion="off")
     elif rung == "fragment_loop":
-        single = X.compile_fragment_loop(db, phys, use_pallas=False)
+        single = X.compile_fragment_loop(db, uphys, use_pallas=False)
         fn = jax.vmap(single) if batched else single
     else:
         raise ValueError(f"unknown ladder rung {rung!r}; valid: {LADDER}")

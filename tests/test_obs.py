@@ -230,6 +230,39 @@ def test_mispredict_classification():
     assert not mispredicted(0.2, 0.4, factor=2.0)  # boundary is inclusive
 
 
+def test_per_op_self_walls_sum_to_total(small_db):
+    # the eager instrumented walk runs un-jitted, so its raw per-op walls can
+    # be orders of magnitude above the compiled total; the profile must
+    # rescale them so the self-wall column is consistent with total_wall_ms
+    eng = GQFastEngine(small_db, strategy="frontier")
+    pq = eng.prepare(QUERY_SD)
+    prof = pq.profile(reps=3, d0=17)
+    assert prof.timing_method == "eager-span-scaled"
+    walls = [o.wall_ms for o in prof.ops if o.wall_ms is not None]
+    assert walls, "at least the non-fused ops must carry a self wall"
+    assert abs(sum(walls) - prof.total_wall_ms) <= max(
+        1e-6 * prof.total_wall_ms, 1e-9
+    )
+    for o in prof.ops:
+        if o.wall_ms is not None:  # raw eager measurement preserved per op
+            assert o.meta["eager_wall_ms"] >= 0.0
+            assert o.kernel_ms is None or o.kernel_ms <= o.wall_ms + 1e-9
+
+
+def test_profile_feeds_strategy_calibration(small_db):
+    eng = GQFastEngine(small_db, strategy="auto")
+    pq = eng.prepare(QUERY_SD)
+    assert pq.plan_sig and eng.calibration.get(pq.plan_sig) is None
+    prof = pq.profile(reps=1, d0=17)
+    obs = eng.calibration.get(pq.plan_sig)
+    assert obs == [h.observed_active_fraction for h in prof.hops]
+    # the store overrides the fanout model on the next strategy choice
+    eng.calibration.record(pq.plan_sig, [0.01])
+    assert eng._pick_strategy(pq.plan, pq.plan_sig) == "fragment_loop"
+    eng.calibration.record(pq.plan_sig, [0.5])
+    assert eng._pick_strategy(pq.plan, pq.plan_sig) == "frontier"
+
+
 def test_strategy_mispredict_counter_increments(small_db):
     eng = GQFastEngine(small_db, strategy="frontier")
     pq = eng.prepare(QUERY_AD)  # semijoin hop: estimate is the trivial 1.0

@@ -270,7 +270,7 @@ def test_exhausted_retries_demote_down_ladder(prepared_sd):
     with faults.active(plan):
         oc = run_with_policy(prepared_sd, {"d0": 3}, policy=pol)
     assert oc.status == "degraded" and oc.demotions == ("active",)
-    assert oc.rung == "scan"
+    assert oc.rung == "unfused"
     assert reg.counter("robust.demotions.active").snapshot() == 1
     assert np.array_equal(oc.value, prepared_sd(d0=3))
 
@@ -401,6 +401,33 @@ def test_kernel_fault_at_trace_time_degrades_to_working_rung(pubmed, engine):
     assert oc.ok and oc.rung in ("xla", "fragment_loop"), oc.to_dict()
     assert plan.total_fires() >= 1
     ref = engine.prepare(SG.QUERY_AD)(t1=5, t2=7)
+    assert np.array_equal(oc.value, ref)
+
+
+def test_fused_kernel_fault_degrades_to_unfused(pubmed, engine):
+    # poison only the fused-region dispatch site: the ladder must shed the
+    # fused kernels at the first demotion (the "unfused" rung re-runs the
+    # same plan as per-hop kernel calls, keeping block skipping) and agree
+    # bit-for-bit with an unpoisoned prepare
+    from repro.core.fuse import has_fused
+
+    eng = GQFastEngine(GQFastDatabase(pubmed))
+    plan = faults.FaultPlan(seed=4).add(
+        faults.FaultSpec(site="ops.fragment_spmv_fused", mode="raise")
+    )
+    with faults.active(plan):
+        # fusion='on': the pubmed reach matrix is dense, so 'auto' would
+        # decline the region and never reach the poisoned site
+        pq = eng.prepare(SG.QUERY_AS, fusion="on")
+        assert has_fused(pq.phys)  # the poisoned site is on the active path
+        oc = run_with_policy(
+            pq, {"a0": 2},
+            policy=RobustPolicy(retry=RetryPolicy(max_attempts=1)),
+        )
+    assert oc.ok and oc.status == "degraded", oc.to_dict()
+    assert oc.rung == "unfused" and oc.demotions == ("active",)
+    assert plan.total_fires() >= 1
+    ref = engine.prepare(SG.QUERY_AS)(a0=2)
     assert np.array_equal(oc.value, ref)
 
 
