@@ -107,6 +107,7 @@ def main() -> None:
         perf_baseline,
         fig15_parallel,
         selectivity,
+        snapshot_restore,
         table3_runtime,
         table4_space,
         table56_denseid,
@@ -127,6 +128,7 @@ def main() -> None:
         "throughput": throughput.run,
         "selectivity": selectivity.run,
         "fusion": fusion.run,
+        "snapshot": snapshot_restore.run,
     }
     from .common import RECORDS
 

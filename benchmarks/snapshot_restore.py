@@ -1,0 +1,87 @@
+"""Snapshot/restore durability costs (BENCH_snapshot.json).
+
+Measures the three legs of the durable-lifecycle story (DESIGN.md
+§Durability): cold build from the raw schema, checksummed snapshot to disk,
+and verified restore from that snapshot — for both dense and packed device
+storage. The headline metric is ``restore_speedup`` (build_ms / restore_ms):
+restore skips the entire encode pipeline (columns round-trip as stored
+encoded bytes) and should beat a cold build despite paying full CRC
+verification on every array. Also times one synchronous scrub pass over the
+restored database — the pre-serving integrity gate's cost.
+
+Acceptance gate (CI fast lane): restore must be bit-identical to the built
+database on a reference query for every encoding, and verified restore must
+not be slower than the cold build — the suite raises (→ red CI) otherwise.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import numpy as np
+
+from repro.core.engine import GQFastDatabase, GQFastEngine
+from repro.data import synth_graph as SG
+from repro.robust.scrub import Scrubber
+from repro.storage import restore_db, snapshot_db
+
+from .common import emit, timeit
+
+SQL = SG.QUERY_SD
+
+
+def run() -> None:
+    schema = SG.make_pubmed(n_docs=8_000, n_terms=400, n_authors=2_000, seed=21)
+    failures = []
+    for enc in ("dense", "packed"):
+        t_build = timeit(
+            lambda: GQFastDatabase(schema, account_space=False,
+                                   device_encodings=enc), iters=1)
+        db = GQFastDatabase(schema, account_space=False, device_encodings=enc)
+        ref = np.asarray(GQFastEngine(db).prepare(SQL)(d0=17))
+
+        tmp = tempfile.mkdtemp(prefix=f"bench_snap_{enc}_")
+        try:
+            t_snap = timeit(lambda: snapshot_db(db, tmp), iters=1)
+            snap_bytes = sum(
+                os.path.getsize(os.path.join(r, f))
+                for r, _, fs in os.walk(tmp) for f in fs
+            )
+            t_restore = timeit(lambda: restore_db(tmp, generation=1), iters=1)
+            db2 = restore_db(tmp, generation=1)
+            got = np.asarray(GQFastEngine(db2).prepare(SQL)(d0=17))
+            identical = bool(np.array_equal(got, ref))
+            t_scrub = timeit(
+                lambda: Scrubber(db2, snapshot_dir=tmp).scrub_full(), iters=1)
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+        speedup = t_build / t_restore
+        emit(f"snapshot/{enc}/build", t_build * 1e6, f"build_ms={t_build*1e3:.0f}")
+        emit(
+            f"snapshot/{enc}/snapshot", t_snap * 1e6,
+            f"snapshot_ms={t_snap*1e3:.0f} mb={snap_bytes/1e6:.1f}",
+            snapshot_bytes=snap_bytes,
+        )
+        emit(
+            f"snapshot/{enc}/restore", t_restore * 1e6,
+            f"restore_ms={t_restore*1e3:.0f} speedup={speedup:.2f} "
+            f"bit_identical={identical}",
+            restore_speedup=round(speedup, 2), bit_identical=identical,
+        )
+        emit(f"snapshot/{enc}/scrub_pass", t_scrub * 1e6,
+             f"scrub_ms={t_scrub*1e3:.0f}")
+        if not identical:
+            failures.append(f"{enc}: restored db not bit-identical")
+        if speedup < 1.0:
+            failures.append(
+                f"{enc}: verified restore slower than cold build "
+                f"({t_restore*1e3:.0f}ms vs {t_build*1e3:.0f}ms)"
+            )
+    if failures:
+        raise RuntimeError("; ".join(failures))
+
+
+if __name__ == "__main__":
+    run()

@@ -1,6 +1,8 @@
 """Checkpoint manager: atomic, retained, mesh-elastic.
 
-Layout:  <dir>/step_<n>/arrays.npz + meta.json   (tmp-dir + os.rename = atomic)
+Layout:  <dir>/step_<n>/arrays.npz + meta.json — published through the shared
+crash-safe writer (``ckpt/atomic.py``: tmp-dir + fsync + os.rename + parent
+fsync, the same pattern the database snapshotter uses).
 
 Restore resharding: checkpoints store *logical* arrays; ``restore`` device_puts
 them under whatever mesh/shardings the restarted job passes — a job restarted
@@ -11,15 +13,16 @@ from __future__ import annotations
 
 import json
 import os
-import shutil
-import tempfile
 import time
 from typing import Any
 
 import jax
 import numpy as np
 
+from .atomic import list_stamped, publish_dir, retain_stamped, stamped_name
+
 SEP = "/"
+STEP_PREFIX = "step_"
 
 
 def _flatten(tree) -> dict[str, Any]:
@@ -48,9 +51,9 @@ class CheckpointManager:
     def save(self, step: int, tree, extra_meta: dict | None = None) -> str:
         flat = _flatten(tree)
         treedef = jax.tree_util.tree_structure(tree)
-        final = os.path.join(self.dir, f"step_{step:010d}")
-        tmp = tempfile.mkdtemp(dir=self.dir, prefix=".tmp_ckpt_")
-        try:
+        final = os.path.join(self.dir, stamped_name(STEP_PREFIX, step))
+
+        def write(tmp: str) -> None:
             np.savez(os.path.join(tmp, "arrays.npz"), **flat)
             meta = {
                 "step": step,
@@ -61,29 +64,16 @@ class CheckpointManager:
             }
             with open(os.path.join(tmp, "meta.json"), "w") as f:
                 json.dump(meta, f)
-            if os.path.exists(final):
-                shutil.rmtree(final)
-            os.rename(tmp, final)  # atomic publish
-        except BaseException:
-            shutil.rmtree(tmp, ignore_errors=True)
-            raise
+
+        publish_dir(final, write, tmp_prefix=".tmp_ckpt_")
         self._retain()
         return final
 
     def _retain(self) -> None:
-        steps = self.list_steps()
-        for s in steps[: -self.keep]:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"), ignore_errors=True)
+        retain_stamped(self.dir, STEP_PREFIX, self.keep)
 
     def list_steps(self) -> list[int]:
-        out = []
-        for name in os.listdir(self.dir):
-            if name.startswith("step_"):
-                try:
-                    out.append(int(name.split("_")[1]))
-                except ValueError:
-                    pass
-        return sorted(out)
+        return list_stamped(self.dir, STEP_PREFIX)
 
     def latest_step(self) -> int | None:
         steps = self.list_steps()
@@ -98,7 +88,7 @@ class CheckpointManager:
             step = self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints in {self.dir}")
-        path = os.path.join(self.dir, f"step_{step:010d}")
+        path = os.path.join(self.dir, stamped_name(STEP_PREFIX, step))
         data = np.load(os.path.join(path, "arrays.npz"))
         leaves_t, treedef = jax.tree_util.tree_flatten_with_path(template)
         keys = [SEP.join(_path_str(p) for p in path_) for path_, _ in leaves_t]

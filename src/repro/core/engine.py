@@ -64,6 +64,19 @@ class GQFastDatabase:
                 )
         self.device = X.build_device_db(schema, self.host_indexes, device_encodings)
 
+    @classmethod
+    def from_parts(cls, schema: Schema, host_indexes, device) -> "GQFastDatabase":
+        """Assemble a database from already-built parts without re-running
+        index construction or device encoding — the snapshot restore path
+        (``storage/snapshot.py``), which rebuilds host indexes and device
+        columns directly from verified stored bytes."""
+        schema.validate()
+        db = cls.__new__(cls)
+        db.schema = schema
+        db.host_indexes = host_indexes
+        db.device = device
+        return db
+
     def space_report(self) -> dict[str, Any]:
         """Host byte-array accounting (paper §5 analytic model) plus the
         ``device`` section: real bytes the device column store holds, per
@@ -303,6 +316,13 @@ class GQFastEngine:
         self._cache: PreparedCache = PreparedCache(max_prepared)
         # per-plan-signature observed active fractions (fed by profile runs)
         self.calibration = CalibrationStore()
+
+    def invalidate_prepared(self) -> int:
+        """Drop every cached prepared query. Required after the device arrays
+        under the executables change in place — a scrubber heal or a snapshot
+        generation swap — because traced executables close over the old
+        buffers. Returns the number of entries dropped."""
+        return self._cache.clear()
 
     def prepare(self, sql: str, block_skipping: str = "auto",
                 fusion: str = "auto") -> PreparedQuery:

@@ -27,6 +27,29 @@ Robustness surface (DESIGN.md §Robustness):
     (kernel-dispatch raises + per-attempt delays + per-attempt raises)
     *before* prepare, so trace-time kernel faults and run-time attempt
     faults both fire — the CI chaos smoke lane.
+
+Durability surface (DESIGN.md §Durability):
+
+  * ``--snapshot-dir`` fast-starts from the latest checksummed snapshot
+    generation (``storage/snapshot.py``) instead of rebuilding indexes; a
+    fresh build publishes generation 1 there for the next start;
+  * SIGHUP — or ``--reload-at N``, every N batches — triggers a verified
+    hot swap: the next generation loads, checksum-verifies, and warms on a
+    background thread while the old one keeps serving, then swaps in at a
+    micro-batch boundary (zero dropped in-flight requests by construction:
+    the loop only swaps between fully-answered batches). A generation that
+    fails verification or warm-up rolls back — the old generation keeps
+    serving, ``serve.reload_failures`` counts, the typed error is logged;
+  * ``--scrub`` runs a full integrity pass before serving and background
+    :class:`repro.robust.scrub.Scrubber` ticks during it; a heal re-prepares
+    every shape (executables may close over replaced arrays);
+  * ``--verify-responses`` replays every answered request on the pure-numpy
+    oracle (``core/reference.py`` — no fault sites, trustworthy under
+    chaos) and counts ``serve.responses_corrupt`` mismatches;
+  * ``--chaos-corrupt`` extends the chaos plan with corrupt-mode faults at
+    ``storage.materialize`` (healed by verified reads), ``scrub.verify``
+    (detect → heal from snapshot), and ``snapshot.load`` (first hot-swap
+    rolls back) — the corrupt-and-heal CI lane.
 """
 from __future__ import annotations
 
@@ -35,15 +58,23 @@ import time
 from collections import deque
 
 
-def _chaos_plan(seed: int):
+def _chaos_plan(seed: int, corrupt: bool = False):
     """The chaos smoke lane's seeded fault mix: a bounded burst of kernel-
     dispatch failures (fires at trace time → ladder demotions), sporadic
     50 ms per-attempt delays (trips ``--deadline-ms``), and sporadic
     retryable attempt failures (exercises retry/backoff after jit caching
-    makes kernel sites quiescent)."""
+    makes kernel sites quiescent).
+
+    ``corrupt`` adds the durability mix (all bounded so late scenarios are
+    deterministic): two corrupted materialize reads (the verified-read path
+    heals them from the memo), three corrupted scrubber reads (persists
+    through the scrubber's re-read retries → detect → quarantine → heal from
+    snapshot → re-verify), and one corrupted snapshot-restore read (the
+    first hot-swap reload fails verification and rolls back; the next
+    succeeds)."""
     from repro.robust import faults
 
-    return (
+    plan = (
         faults.FaultPlan(seed=seed)
         .add(faults.FaultSpec(site="ops.", mode="raise", prob=0.5, max_fires=4))
         .add(faults.FaultSpec(site="runner.execute", mode="delay",
@@ -51,12 +82,52 @@ def _chaos_plan(seed: int):
         .add(faults.FaultSpec(site="runner.execute", mode="raise",
                               prob=0.15, max_fires=6))
     )
+    if corrupt:
+        plan.add(faults.FaultSpec(site="storage.materialize", mode="corrupt",
+                                  max_fires=2))
+        plan.add(faults.FaultSpec(site="scrub.verify", mode="corrupt",
+                                  max_fires=3))
+        plan.add(faults.FaultSpec(site="snapshot.load", mode="corrupt",
+                                  max_fires=1))
+    return plan
+
+
+def load_generation(snapshot_dir: str, queries: dict, sample_params,
+                    bucket: int, generation: int | None = None,
+                    strategy: str = "frontier"):
+    """The fallible half of a verified hot swap: restore one snapshot
+    generation (every array checksum-verified — raises
+    :class:`repro.robust.errors.IntegrityError` on any mismatch), build an
+    engine on it, prepare and warm every query shape (single + batched
+    executables, so the swap adds no compile stall), and return
+    ``(engine, prepared, generation)``. Raises without side effects on the
+    caller's serving state — the rollback contract is simply "don't swap"."""
+    import numpy as np
+
+    from repro.core.engine import GQFastEngine
+    from repro.storage.snapshot import latest_generation, restore_db
+
+    gen = generation if generation is not None else latest_generation(snapshot_dir)
+    if gen is None:
+        raise FileNotFoundError(f"no snapshot generations in {snapshot_dir}")
+    db = restore_db(snapshot_dir, gen)
+    eng = GQFastEngine(db, strategy=strategy)
+    prepared = {}
+    for name, sql in queries.items():
+        pq = eng.prepare(sql)
+        p = sample_params(name)
+        pq(**p)
+        pq.execute_batch(**{k: np.full(bucket, v) for k, v in p.items()})
+        prepared[name] = pq
+    return eng, prepared, gen
 
 
 def _serve_analytics(args) -> None:
     import contextlib
+    import contextvars
     import json
     import signal
+    import threading
 
     import numpy as np
 
@@ -67,16 +138,58 @@ def _serve_analytics(args) -> None:
     from repro.robust import faults
     from repro.robust.errors import QueryError, ResourceError
 
+    reg = MetricsRegistry()
+
     print("loading database…")
     t0 = time.time()
-    schema = SG.make_pubmed(
-        n_docs=args.docs, n_terms=1_200, n_authors=args.docs // 5, seed=5
-    )
-    db = GQFastDatabase(schema, account_space=False)
+    db = None
+    generation = 0
+    if args.snapshot_dir:
+        from repro.robust.errors import IntegrityError
+        from repro.storage.snapshot import latest_generation
+
+        gen = latest_generation(args.snapshot_dir)
+        if gen is not None:
+            from repro.storage.snapshot import restore_db
+
+            try:
+                db = restore_db(args.snapshot_dir, gen)
+                generation = gen
+                reg.counter("serve.fast_starts").inc()
+                print(f"  fast start: restored generation {gen} "
+                      f"from {args.snapshot_dir}")
+            except IntegrityError as e:
+                # a corrupted snapshot never serves; rebuild from source
+                reg.counter("serve.restore_failures").inc()
+                reg.counter(f"robust.errors.{e.code}").inc()
+                print(f"  snapshot restore REJECTED [{e.code}]: {e}\n"
+                      "  rebuilding from source data…")
+    if db is None:
+        schema = SG.make_pubmed(
+            n_docs=args.docs, n_terms=1_200, n_authors=args.docs // 5, seed=5
+        )
+        db = GQFastDatabase(schema, account_space=False)
+        if args.snapshot_dir:
+            from repro.storage.snapshot import latest_generation, snapshot_db
+
+            snapshot_db(db, args.snapshot_dir)
+            generation = latest_generation(args.snapshot_dir) or 1
+            print(f"  published snapshot generation {generation} "
+                  f"to {args.snapshot_dir}")
+    schema = db.schema
     eng = GQFastEngine(db)
+    reg.gauge("serve.db_load_ms").set((time.time() - t0) * 1e3)
     print(f"  {time.time()-t0:.1f}s "
           f"(DT {schema.relationships['DT'].num_rows} rows, "
           f"DA {schema.relationships['DA'].num_rows} rows)")
+
+    # integrity manifest: a restored DB carries one; a fresh build gets one
+    # whenever something will check it (scrubber ticks or corrupt-mode chaos)
+    if (args.scrub or args.chaos_corrupt) \
+            and getattr(db.device, "integrity", None) is None:
+        from repro.storage.integrity import attach_manifest
+
+        attach_manifest(db.device)
 
     queries = {
         "AS": SG.QUERY_AS, "SD": SG.QUERY_SD, "FSD": SG.QUERY_FSD,
@@ -98,7 +211,6 @@ def _serve_analytics(args) -> None:
         return {"t1": int(rng.integers(0, n_terms)),
                 "t2": int(rng.integers(0, n_terms))}
 
-    reg = MetricsRegistry()
     policy = RobustPolicy(
         retry=RetryPolicy(max_attempts=2, base_ms=2.0, seed=args.chaos_seed),
         deadline_ms=args.deadline_ms,
@@ -120,17 +232,28 @@ def _serve_analytics(args) -> None:
 
     # the chaos plan must be live BEFORE prepare: kernel-dispatch fault sites
     # fire at trace time, so only compiles under the plan can see them
-    chaos = faults.active(_chaos_plan(args.chaos_seed)) if args.chaos \
-        else contextlib.nullcontext()
+    chaos = faults.active(_chaos_plan(args.chaos_seed, args.chaos_corrupt)) \
+        if args.chaos else contextlib.nullcontext()
     stop: dict = {"signal": None}
+    reload_req = {"pending": 0}
 
     def _on_signal(signum, frame):  # drain, flush, exit cleanly
         stop["signal"] = signum
+
+    def _on_hup(signum, frame):  # verified hot swap at the next batch boundary
+        reload_req["pending"] += 1
 
     old_handlers = {
         s: signal.signal(s, _on_signal)
         for s in (signal.SIGINT, signal.SIGTERM)
     }
+    if hasattr(signal, "SIGHUP"):
+        old_handlers[signal.SIGHUP] = signal.signal(signal.SIGHUP, _on_hup)
+
+    # response verification oracle: the pure-numpy reference engine has no
+    # fault sites, so its answers stay trustworthy while a chaos plan is live
+    if args.verify_responses:
+        from repro.core.reference import run_sql as _oracle_run_sql
 
     results: list = []
     sizes: list[int] = []
@@ -156,6 +279,111 @@ def _serve_analytics(args) -> None:
                     prep_errors.pop(name, None)
 
             bucket = batch_bucket(args.batch)
+
+            # one mutable serving reference: the hot-swap applies by
+            # replacing these four entries together at a batch boundary
+            serving = {"eng": eng, "prepared": prepared,
+                       "prep_errors": prep_errors, "generation": generation,
+                       "scrubber": None}
+            reg.gauge("serve.serving_generation").set(float(generation))
+
+            heal_events: list[str] = []
+
+            def _make_scrubber(for_db):
+                from repro.robust.scrub import Scrubber
+
+                return Scrubber(
+                    for_db, snapshot_dir=args.snapshot_dir, cols_per_tick=2,
+                    registry=reg, on_heal=heal_events.append,
+                )
+
+            if args.scrub:
+                # pre-serving gate: one full pass — at-rest corruption is
+                # detected (and healed from snapshot) before any query reads it
+                sc = _make_scrubber(db)
+                gate = sc.scrub_full()
+                print(f"  integrity gate: {gate['verified']} verified, "
+                      f"{gate['healed']} healed, {gate['failed']} failed")
+                if args.scrub_interval_ms > 0:
+                    sc.start(args.scrub_interval_ms / 1e3)
+                serving["scrubber"] = sc
+
+            reload_state: dict = {"thread": None, "result": None, "error": None}
+
+            def _start_reload() -> None:
+                def work():
+                    try:
+                        reload_state["result"] = load_generation(
+                            args.snapshot_dir, queries, sample_params, bucket,
+                        )
+                    except BaseException as e:  # noqa: BLE001 — typed below
+                        reload_state["error"] = e
+
+                # copy_context: the chaos FaultPlan is a ContextVar, which
+                # threads do not inherit — the reload must run under the plan
+                # so snapshot.load faults fire during chaos lanes
+                ctx = contextvars.copy_context()
+                th = threading.Thread(
+                    target=lambda: ctx.run(work), name="reloader", daemon=True
+                )
+                reload_state["thread"] = th
+                th.start()
+
+            def _apply_reload() -> None:
+                """Runs only at micro-batch boundaries: the previous batch is
+                fully answered, so the swap drops zero in-flight requests."""
+                th = reload_state["thread"]
+                if th is None or th.is_alive():
+                    return
+                th.join()
+                reload_state["thread"] = None
+                err = reload_state.pop("error", None)
+                res = reload_state.pop("result", None)
+                reload_state.update(result=None, error=None)
+                if err is not None:
+                    # rollback: the old generation keeps serving untouched
+                    code = getattr(err, "code", type(err).__name__)
+                    reg.counter("serve.reload_failures").inc()
+                    reg.counter(f"robust.errors.{code}").inc()
+                    print(f"  reload FAILED, generation "
+                          f"{serving['generation']} keeps serving "
+                          f"[{code}]: {err}")
+                    return
+                new_eng, new_prepared, gen = res
+                old_sc = serving["scrubber"]
+                if old_sc is not None:
+                    old_sc.stop()
+                serving.update(
+                    eng=new_eng, prepared=new_prepared, prep_errors={},
+                    generation=gen,
+                )
+                if old_sc is not None:
+                    sc = _make_scrubber(new_eng.db)
+                    if args.scrub_interval_ms > 0:
+                        sc.start(args.scrub_interval_ms / 1e3)
+                    serving["scrubber"] = sc
+                reg.counter("serve.generation_reloads").inc()
+                reg.gauge("serve.serving_generation").set(float(gen))
+                print(f"  hot-swapped to generation {gen}")
+
+            def _reprepare_after_heal() -> None:
+                """Executables can close over replaced device buffers — after
+                a heal, drop and rebuild every prepared shape."""
+                n_heals = len(heal_events)
+                heal_events.clear()
+                serving["eng"].invalidate_prepared()
+                fresh = 0
+                for name, sql in queries.items():
+                    try:
+                        serving["prepared"][name] = serving["eng"].prepare(sql)
+                        serving["prep_errors"].pop(name, None)
+                        fresh += 1
+                    except QueryError as e:
+                        serving["prep_errors"][name] = e
+                        reg.counter(f"robust.errors.{e.code}").inc()
+                reg.counter("serve.reprepares").inc(fresh)
+                print(f"  re-prepared {fresh} shapes after "
+                      f"{n_heals} heal(s)")
             names = list(queries)
             stream = [
                 (i, names[int(rng.integers(0, len(names)))])
@@ -237,6 +465,17 @@ def _serve_analytics(args) -> None:
                     print(f"  signal {stop['signal']}: draining, {n} requests"
                           " unserved")
                     break
+                # batch boundary: apply a finished reload, launch a requested
+                # one, re-prepare after heals — never mid-batch
+                _apply_reload()
+                if (reload_req["pending"] > 0 and reload_state["thread"] is None
+                        and args.snapshot_dir):
+                    reload_req["pending"] -= 1
+                    _start_reload()
+                if heal_events:
+                    _reprepare_after_heal()
+                prepared = serving["prepared"]
+                prep_errors = serving["prep_errors"]
                 tb = time.perf_counter()
                 # collect: drain up to `batch` requests of the head's shape
                 i0, kind, p0 = queue.popleft()
@@ -292,6 +531,25 @@ def _serve_analytics(args) -> None:
                 reg.counter("serve.requests_served").inc(len(group))
                 reg.counter("serve.batches_executed").inc()
                 reg.counter("serve.padded_rows").inc(bucket - len(group))
+                if args.verify_responses and outcomes is not None:
+                    # replay every answered request on the numpy oracle —
+                    # the zero-corrupted-responses guarantee is checked, not
+                    # assumed (outside the latency measurement)
+                    sdb = serving["eng"].db.schema
+                    for row, (_, pr) in enumerate(group):
+                        oc = outcomes[row]
+                        if oc is None or oc.status == "error" or oc.value is None:
+                            continue
+                        expect = _oracle_run_sql(sdb, queries[kind], pr)
+                        reg.counter("serve.responses_verified").inc()
+                        got = np.asarray(oc.value)
+                        if got.shape != expect.shape or not np.allclose(
+                                got, expect, rtol=1e-4, atol=1e-5):
+                            reg.counter("serve.responses_corrupt").inc()
+                            print(f"  CORRUPT RESPONSE: {kind} params={pr} "
+                                  f"max|Δ|={np.abs(got - expect).max():.3g}")
+                if args.reload_at and len(sizes) % args.reload_at == 0:
+                    reload_req["pending"] += 1
                 reg.gauge("serve.batch_occupancy").set(float(np.mean(sizes)))
                 reg.gauge("serve.bucket_padding_waste").set(
                     1.0 - float(np.sum(sizes)) / (len(sizes) * bucket)
@@ -302,7 +560,21 @@ def _serve_analytics(args) -> None:
                 )
                 if args.metrics_every and len(sizes) % args.metrics_every == 0:
                     dump_metrics()
+
             dt = time.perf_counter() - t0
+            # finish outstanding hot swaps: every requested reload completes
+            # (or rolls back) before the summary, so `--reload-at` near the
+            # end of the stream still exercises the full swap path
+            while stop["signal"] is None and args.snapshot_dir and (
+                    reload_state["thread"] is not None
+                    or reload_req["pending"] > 0):
+                if reload_state["thread"] is None:
+                    reload_req["pending"] -= 1
+                    _start_reload()
+                reload_state["thread"].join()
+                _apply_reload()
+            if serving["scrubber"] is not None:
+                serving["scrubber"].stop()
     finally:
         for s, h in old_handlers.items():
             signal.signal(s, h)
@@ -314,6 +586,18 @@ def _serve_analytics(args) -> None:
         print("  chaos fault stats:", json.dumps(plan.stats()))
         print("  robust counters:",
               json.dumps(reg.counters_with_prefix("robust.")))
+    if args.snapshot_dir or args.scrub or args.verify_responses:
+        durable = {
+            k: v for k, v in reg.counters_with_prefix("serve.").items()
+            if k.split(".", 1)[1] in (
+                "fast_starts", "restore_failures", "generation_reloads",
+                "reload_failures", "reprepares", "responses_verified",
+                "responses_corrupt",
+            )
+        }
+        print("  durability counters:", json.dumps(durable))
+        print("  integrity counters:",
+              json.dumps(reg.counters_with_prefix("robust.integrity.")))
 
     answered = sum(r is not None for r in results)
     by_status = {"ok": 0, "degraded": 0, "error": 0}
@@ -381,6 +665,26 @@ def main() -> None:
                          "plan (kernel raises + attempt delays/raises)")
     ap.add_argument("--chaos-seed", type=int, default=0,
                     help="analytics: FaultPlan / retry-jitter seed")
+    ap.add_argument("--chaos-corrupt", action="store_true",
+                    help="analytics: add corrupt-mode faults to the chaos "
+                         "plan (materialize reads, scrubber reads, snapshot "
+                         "restore) — requires --chaos")
+    ap.add_argument("--snapshot-dir", default=None, metavar="DIR",
+                    help="analytics: fast-start from the latest checksummed "
+                         "snapshot generation here (publishing one on fresh "
+                         "build); enables SIGHUP/--reload-at hot swaps")
+    ap.add_argument("--reload-at", type=int, default=0, metavar="N",
+                    help="analytics: trigger a verified hot-swap reload "
+                         "every N served batches (0: SIGHUP only)")
+    ap.add_argument("--scrub", action="store_true",
+                    help="analytics: full integrity scrub before serving + "
+                         "background scrubber ticks during it")
+    ap.add_argument("--scrub-interval-ms", type=float, default=200.0,
+                    help="analytics: background scrub tick interval "
+                         "(0: pre-serve gate only)")
+    ap.add_argument("--verify-responses", action="store_true",
+                    help="analytics: replay every answered request on the "
+                         "numpy oracle; count serve.responses_corrupt")
     args = ap.parse_args()
 
     if args.workload == "analytics":

@@ -13,10 +13,18 @@ Zero-dependency (numpy only) metrics for the serve path and the engine:
 
 The module-level :data:`REGISTRY` is the default sink (engine mispredict
 counters); servers that want isolation construct their own registry.
+
+Thread safety: mutation (``inc``/``set``/``observe``) and registry
+get-or-create are lock-protected — the serve loop's worker threads, the
+background scrubber (robust/scrub.py), and the hot-swap reloader all write
+the same registry. Reads (``snapshot``/``value``) are deliberately
+lock-free: a torn multi-field histogram snapshot under concurrent observes
+is a monitoring-grade approximation, never a crash.
 """
 from __future__ import annotations
 
 import json
+import threading
 from bisect import bisect_left
 from typing import Any
 
@@ -28,26 +36,30 @@ DEFAULT_BUCKETS = tuple(float(2.0**k) * 1e-3 for k in range(28))
 
 
 class Counter:
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
     def __init__(self, value: float = 0.0):
         self.value = float(value)
+        self._lock = threading.Lock()
 
     def inc(self, n: float = 1.0) -> None:
-        self.value += n
+        with self._lock:  # += on a float is read-modify-write, not atomic
+            self.value += n
 
     def snapshot(self) -> float:
         return self.value
 
 
 class Gauge:
-    __slots__ = ("value",)
+    __slots__ = ("value", "_lock")
 
     def __init__(self, value: float = 0.0):
         self.value = float(value)
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self.value = float(v)
+        with self._lock:
+            self.value = float(v)
 
     def snapshot(self) -> float:
         return self.value
@@ -58,7 +70,7 @@ class Histogram:
     first ``len(bounds)`` buckets; values above ``bounds[-1]`` land in the
     overflow bucket (whose upper edge is the observed max)."""
 
-    __slots__ = ("bounds", "counts", "count", "sum", "min", "max")
+    __slots__ = ("bounds", "counts", "count", "sum", "min", "max", "_lock")
 
     def __init__(self, bounds=DEFAULT_BUCKETS):
         self.bounds = tuple(float(b) for b in bounds)
@@ -69,14 +81,16 @@ class Histogram:
         self.sum = 0.0
         self.min = float("inf")
         self.max = float("-inf")
+        self._lock = threading.Lock()
 
     def observe(self, v: float) -> None:
         v = float(v)
-        self.counts[bisect_left(self.bounds, v)] += 1
-        self.count += 1
-        self.sum += v
-        self.min = min(self.min, v)
-        self.max = max(self.max, v)
+        with self._lock:
+            self.counts[bisect_left(self.bounds, v)] += 1
+            self.count += 1
+            self.sum += v
+            self.min = min(self.min, v)
+            self.max = max(self.max, v)
 
     def observe_many(self, vs) -> None:
         for v in np.asarray(vs, np.float64).ravel():
@@ -126,17 +140,29 @@ class MetricsRegistry:
         self._counters: dict[str, Counter] = {}
         self._gauges: dict[str, Gauge] = {}
         self._histograms: dict[str, Histogram] = {}
+        self._lock = threading.Lock()
 
     def counter(self, name: str) -> Counter:
-        return self._counters.setdefault(name, Counter())
+        c = self._counters.get(name)
+        if c is None:
+            with self._lock:
+                c = self._counters.setdefault(name, Counter())
+        return c
 
     def gauge(self, name: str) -> Gauge:
-        return self._gauges.setdefault(name, Gauge())
+        g = self._gauges.get(name)
+        if g is None:
+            with self._lock:
+                g = self._gauges.setdefault(name, Gauge())
+        return g
 
     def histogram(self, name: str, bounds=DEFAULT_BUCKETS) -> Histogram:
         h = self._histograms.get(name)
         if h is None:
-            h = self._histograms[name] = Histogram(bounds)
+            with self._lock:
+                h = self._histograms.get(name)
+                if h is None:
+                    h = self._histograms[name] = Histogram(bounds)
         return h
 
     def counters_with_prefix(self, prefix: str) -> dict[str, float]:
@@ -149,9 +175,10 @@ class MetricsRegistry:
         }
 
     def reset(self) -> None:
-        self._counters.clear()
-        self._gauges.clear()
-        self._histograms.clear()
+        with self._lock:
+            self._counters.clear()
+            self._gauges.clear()
+            self._histograms.clear()
 
     def snapshot(self) -> dict[str, Any]:
         return {

@@ -4,6 +4,7 @@
 ``admission`` — pre-execute memory budgeting + the prepared-query LRU.
 ``runner``    — deadlines, retry/backoff, and the degradation ladder.
 ``faults``    — deterministic, seedable fault injection for chaos tests.
+``scrub``     — background integrity scrubbing + heal-from-snapshot.
 """
 from .admission import (  # noqa: F401
     AdmissionController,
@@ -15,6 +16,7 @@ from .admission import (  # noqa: F401
 from .errors import (  # noqa: F401
     DeadlineExceeded,
     ExecutionError,
+    IntegrityError,
     ParseError,
     PlanError,
     QueryError,
@@ -22,6 +24,7 @@ from .errors import (  # noqa: F401
     ValidationError,
     wrap_execution_error,
 )
+from .scrub import Scrubber  # noqa: F401
 from .runner import (  # noqa: F401
     LADDER,
     Deadline,

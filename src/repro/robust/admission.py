@@ -28,6 +28,7 @@ shapes; evictions are counted on the shared metrics registry.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Any
@@ -188,7 +189,12 @@ class AdmissionController:
 class PreparedCache:
     """Fixed-capacity LRU for prepared queries: bounds compile-cache growth
     under many distinct query shapes (each entry pins a traced executable
-    pair). Eviction order is least-recently-*used* — ``get`` refreshes."""
+    pair). Eviction order is least-recently-*used* — ``get`` refreshes.
+
+    Thread-safe: serve workers, the hot-swap warm-up thread, and scrubber
+    heal callbacks (which :meth:`clear` stale executables) touch one cache
+    concurrently; an unguarded ``move_to_end`` during ``popitem`` corrupts
+    the OrderedDict."""
 
     def __init__(self, capacity: int = 64,
                  registry: MetricsRegistry | None = None):
@@ -197,24 +203,43 @@ class PreparedCache:
         self.capacity = capacity
         self.registry = registry if registry is not None else REGISTRY
         self._data: "OrderedDict[Any, Any]" = OrderedDict()
+        self._lock = threading.RLock()
 
     def get(self, key):
-        v = self._data.get(key)
+        with self._lock:
+            v = self._data.get(key)
+            if v is not None:
+                self._data.move_to_end(key)
         if v is not None:
-            self._data.move_to_end(key)
             self.registry.counter("engine.prepared_cache_hits").inc()
         return v
 
     def put(self, key, value) -> None:
-        if key in self._data:
-            self._data.move_to_end(key)
-        self._data[key] = value
-        while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
-            self.registry.counter("engine.prepared_cache_evictions").inc()
+        evictions = 0
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                evictions += 1
+        if evictions:
+            self.registry.counter("engine.prepared_cache_evictions").inc(evictions)
+
+    def clear(self) -> int:
+        """Drop every entry (device arrays were swapped under the prepared
+        executables — a heal or generation reload). Returns entries dropped."""
+        with self._lock:
+            n = len(self._data)
+            self._data.clear()
+        if n:
+            self.registry.counter("engine.prepared_cache_invalidations").inc(n)
+        return n
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     def __contains__(self, key) -> bool:
-        return key in self._data
+        with self._lock:
+            return key in self._data

@@ -20,7 +20,8 @@ The hierarchy:
     │                       TypeError)     code=VALIDATION   retryable=False
     ├── ResourceError      (RuntimeError)  code=RESOURCE     retryable=False
     ├── DeadlineExceeded   (TimeoutError)  code=DEADLINE     retryable=True
-    └── ExecutionError     (RuntimeError)  code=EXECUTION    retryable=True
+    ├── ExecutionError     (RuntimeError)  code=EXECUTION    retryable=True
+    └── IntegrityError     (RuntimeError)  code=INTEGRITY    retryable=False
 
 ``retryable`` defaults are per-class but overridable per-raise (e.g. an
 injected transient kernel fault is a retryable ExecutionError, a shape
@@ -127,6 +128,20 @@ class ExecutionError(QueryError, RuntimeError):
 
     code = "EXECUTION"
     default_retryable = True
+
+
+class IntegrityError(QueryError, RuntimeError):
+    """Checksum mismatch on durable or device-resident data: a snapshot file
+    whose bytes no longer hash to the manifest entry, a device column whose
+    decoded view disagrees with its recorded digest, or a read of a
+    quarantined column. Never retryable — retrying a read of corrupted data
+    cannot yield a different answer; the remedy is restore/heal (the
+    scrubber's quarantine → reload-from-snapshot → re-verify cycle), not
+    another attempt. Context: ``table``/``key``/``column`` naming the
+    offending column (or ``path``/``array`` for snapshot files),
+    ``expected_crc``, ``actual_crc``, ``generation``."""
+
+    code = "INTEGRITY"
 
 
 def wrap_execution_error(exc: BaseException, **context: Any) -> QueryError:

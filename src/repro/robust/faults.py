@@ -20,6 +20,10 @@ chaos tests address faults by these names):
     ops.fragment_spmm       Pallas SpMM dispatch (batched hop)
     ops.fragment_spmm_packed    decode-fused SpMM dispatch
     storage.materialize     whole-column decode in the device column store
+    snapshot.load           snapshot restore (fire at entry; corrupt applies
+                            to each loaded array *before* checksum verify)
+    scrub.verify            scrubber encoded-bytes re-read (corrupt emulates
+                            at-rest device corruption for one verification)
     runner.execute          one ladder-rung execution attempt
     serve.request           one serve-loop micro-batch
 

@@ -36,9 +36,63 @@ from typing import Any
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from ..kernels.ref import bitgather_ref as _gather_packed
 from ..robust import faults as _faults
+
+#: Re-reads a verified materialize attempts before declaring the corruption
+#: persistent and raising IntegrityError (a transient flip heals from the
+#: memo; repeated mismatches mean the stored state itself is bad).
+READ_HEAL_RETRIES = 2
+
+
+def _quarantine_check(col) -> None:
+    if col._quarantined:
+        from ..obs.metrics import REGISTRY
+        from ..robust.errors import IntegrityError
+
+        t, k, name = col._addr or ("?", "?", "?")
+        REGISTRY.counter("robust.integrity.quarantined_reads").inc()
+        raise IntegrityError(
+            f"column I_{t}.{k}/{name} is quarantined pending repair",
+            table=t, key=k, column=name, quarantined=True,
+        )
+
+
+def _verify_read(col, value, reread):
+    """Integrity-verified read (active only once a manifest is attached,
+    ``storage/integrity.py``): hash the decoded bytes against the recorded
+    digest. On mismatch, re-read up to :data:`READ_HEAL_RETRIES` times — the
+    memo holds the true decode, so a *transient* corruption (a fault-injected
+    flipped read) heals silently (``robust.integrity.read_heals``); a
+    mismatch that survives every re-read is persistent and raises
+    :class:`~repro.robust.errors.IntegrityError` rather than letting the bad
+    bytes enter a trace. Tracers pass through unverified (nothing concrete
+    to hash)."""
+    if isinstance(value, jax.core.Tracer):
+        return value
+    from .integrity import crc32c
+
+    if crc32c(np.asarray(value)) == col._expected_crc:
+        return value
+    from ..obs.metrics import REGISTRY
+    from ..robust.errors import IntegrityError
+
+    REGISTRY.counter("robust.integrity.read_failures").inc()
+    actual = None
+    for _ in range(READ_HEAL_RETRIES):
+        value = reread()
+        actual = crc32c(np.asarray(value))
+        if actual == col._expected_crc:
+            REGISTRY.counter("robust.integrity.read_heals").inc()
+            return value
+    t, k, name = col._addr or ("?", "?", "?")
+    raise IntegrityError(
+        f"decoded column I_{t}.{k}/{name} failed checksum verification",
+        table=t, key=k, column=name,
+        expected_crc=col._expected_crc, actual_crc=actual,
+    )
 
 
 def _memo_materialize(col, decode):
@@ -51,8 +105,21 @@ def _memo_materialize(col, decode):
 
     Fault site ``storage.materialize``: fires before the decode; corrupt-mode
     specs transform only the *returned* value, after the memo read/write, so
-    the cached copy always holds the true decode (corrupt-then-restore)."""
+    the cached copy always holds the true decode (corrupt-then-restore).
+    With an integrity manifest attached, every concrete return value is
+    checksum-verified (:func:`_verify_read`) — the corrupt site turns from a
+    silent wrong-answer generator into a detected (and usually self-healed)
+    event."""
     _faults.fire("storage.materialize", kind=getattr(col, "kind", "?"))
+    if col._expected_crc is not None or col._quarantined:
+        _quarantine_check(col)
+        if col._dense is None:
+            out = decode()
+            if isinstance(out, jax.core.Tracer):
+                return out
+            col._dense = out
+        reread = lambda: _faults.corrupt("storage.materialize", col._dense)  # noqa: E731
+        return _verify_read(col, reread(), reread)
     if col._dense is None:
         out = decode()
         if isinstance(out, jax.core.Tracer):
@@ -67,6 +134,12 @@ class DeviceColumn:
 
     kind: str = "abstract"
     count: int
+
+    # integrity state (class-level defaults = zero-cost until a manifest is
+    # attached via storage/integrity.py; attach sets instance attributes)
+    _expected_crc: int | None = None  # decoded-view CRC32C to verify reads
+    _addr: tuple | None = None  # (table, key, column) for error context
+    _quarantined: bool = False  # scrubber-detected, pending repair
 
     def materialize(self) -> jnp.ndarray:
         raise NotImplementedError
@@ -102,6 +175,11 @@ class DenseColumn(DeviceColumn):
         return int(self.array.shape[0])
 
     def materialize(self) -> jnp.ndarray:
+        if self._expected_crc is not None or self._quarantined:
+            # a dense column IS its own storage: there is no memo to heal a
+            # mismatch from, so a failed verification is always persistent
+            _quarantine_check(self)
+            return _verify_read(self, self.array, lambda: self.array)
         return self.array
 
     def gather(self, ids) -> jnp.ndarray:
